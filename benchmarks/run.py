@@ -1,0 +1,272 @@
+"""Benchmark harness: one function per paper figure/table.
+
+CSV columns: ``name,us_per_call,derived``
+  * name        - figure + datapoint id (e.g. fig13/dim=1024/cusparse)
+  * us_per_call - the datapoint's latency in microseconds where the figure
+                  plots a latency/throughput; otherwise the y-value in the
+                  figure's own unit (LUTs, FFs, MHz, W, ratio)
+  * derived     - auxiliary metric (speedup, ones, reduction, NRMSE, ...)
+
+Figures 5-12 sample real random matrices, decompose them with the actual
+PN/CSD pipeline (exact set-bit counts), and evaluate the calibrated
+area/frequency/power models.  Figures 13-23 combine our FPGA model with the
+V100/SIGMA baseline models (constants pinned to the paper's stated anchors;
+see core/baselines.py).  The `esn/` rows reproduce the workload itself:
+reservoir quality on the canonical tasks in fp32 vs the paper's int8+CSD
+arithmetic.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")  # allow `python -m benchmarks.run` from repo root
+
+from repro.core import baselines, costmodel
+from repro.core.bitplanes import decompose
+from repro.core.sparse import random_sparse_matrix
+
+ROWS: list = []
+
+
+def emit(name: str, value: float, derived=""):
+    ROWS.append(f"{name},{value:.6g},{derived}")
+
+
+def _exact_ones(dim, es, bits=8, mode="pn", seed=0):
+    rng = np.random.default_rng(seed)
+    m = random_sparse_matrix(dim, dim, es, rng, weight_bits=bits)
+    return decompose(m.astype(np.int64), bits, mode=mode,
+                     rng=np.random.default_rng(seed)).ones
+
+
+# ---------------------------------------------------------------------------
+# Section IV — RTL synthesis behaviour (Figs 5-8)
+# ---------------------------------------------------------------------------
+def fig05_bit_sparsity():
+    """Hardware utilization vs bit-sparsity of a 64x64 matrix (8-bit)."""
+    rng = np.random.default_rng(5)
+    for bs in (0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0):
+        bits = (rng.random((8, 64, 64)) >= bs).astype(np.uint8)
+        ones = int(bits.sum())
+        emit(f"fig05/bit_sparsity={bs:.3f}/LUT", costmodel.luts_for_ones(ones),
+             f"ones={ones}")
+        emit(f"fig05/bit_sparsity={bs:.3f}/FF", costmodel.ffs_for_ones(ones))
+
+
+def fig06_element_vs_bit_sparse():
+    """Element-sparse matrices cost the same as equally bit-sparse ones."""
+    for es in (0.0, 0.25, 0.5, 0.75, 0.9):
+        ones_es = _exact_ones(64, es, seed=6)
+        total_bits = 64 * 64 * 7
+        bs_equiv = 1.0 - ones_es / total_bits
+        rng = np.random.default_rng(7)
+        ones_bs = int((rng.random((7, 64, 64)) >= bs_equiv).sum())
+        emit(f"fig06/es={es:.2f}/LUT(es)", ones_es, f"bs_equiv={bs_equiv:.3f}")
+        emit(f"fig06/es={es:.2f}/LUT(bs)", ones_bs,
+             f"ratio={ones_es / max(ones_bs, 1):.3f}")
+
+
+def fig07_matrix_size():
+    """Utilization vs matrix dimension (quadratic => linear per element)."""
+    for dim in (16, 32, 64, 128, 256):
+        ones = _exact_ones(dim, 0.0, seed=dim)
+        emit(f"fig07/dim={dim}/LUT", ones,
+             f"per_element={ones / (dim * dim):.3f}")
+
+
+def fig08_bitwidth():
+    """Utilization of 64x64 random matrix vs weight bit-width (linear)."""
+    for bits in (1, 2, 4, 8, 16, 32):
+        ones = _exact_ones(64, 0.0, bits=bits, seed=bits)
+        emit(f"fig08/bits={bits}/LUT", ones,
+             f"per_bit={ones / max(bits - 1, 1):.0f}")
+
+
+# ---------------------------------------------------------------------------
+# Section V — CSD (Fig 9)
+# ---------------------------------------------------------------------------
+def fig09_csd():
+    for es in (0.0, 0.2, 0.4, 0.6, 0.8, 0.9):
+        pn = _exact_ones(64, es, mode="pn", seed=9)
+        csd = _exact_ones(64, es, mode="csd", seed=9)
+        emit(f"fig09/es={es:.2f}/naive_LUT", pn)
+        emit(f"fig09/es={es:.2f}/csd_LUT", csd,
+             f"reduction={1 - csd / max(pn, 1):.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Section VI — large-scale designs (Figs 10-12)
+# ---------------------------------------------------------------------------
+def _large_points():
+    for dim in (512, 1024):
+        for es in (0.40, 0.60, 0.80, 0.90, 0.95, 0.98):
+            for mode in ("pn", "csd"):
+                ones = costmodel.expected_ones(dim, dim, es, 8, mode)
+                if costmodel.luts_for_ones(ones) > costmodel.XCVU13P.total_luts:
+                    continue  # does not fit the device (paper: 1024 @ <60%)
+                yield dim, es, mode, ones
+
+
+def fig10_large_area():
+    for dim, es, mode, ones in _large_points():
+        emit(f"fig10/{dim}x{dim}/es={es:.2f}/{mode}/LUT",
+             costmodel.luts_for_ones(ones),
+             f"FF={costmodel.ffs_for_ones(ones):.0f}")
+
+
+def fig11_large_fmax():
+    for dim, es, mode, ones in _large_points():
+        dp = costmodel.design_point(dim, dim, es, mode=mode, ones=ones)
+        emit(f"fig11/{dim}x{dim}/es={es:.2f}/{mode}/Fmax_MHz",
+             dp.fmax_hz / 1e6, f"slrs={dp.slrs}")
+
+
+def fig12_large_power():
+    for dim, es, mode, ones in _large_points():
+        dp = costmodel.design_point(dim, dim, es, mode=mode, ones=ones)
+        emit(f"fig12/{dim}x{dim}/es={es:.2f}/{mode}/power_W", dp.power_w,
+             f"fmax_MHz={dp.fmax_hz / 1e6:.0f}")
+
+
+# ---------------------------------------------------------------------------
+# Section VII-A — GPU comparison (Figs 13-18)
+# ---------------------------------------------------------------------------
+def fig13_14_dim_sweep():
+    for dim in (64, 128, 256, 512, 1024, 2048, 4096):
+        fpga = costmodel.design_point(dim, dim, 0.98)
+        emit(f"fig13/dim={dim}/fpga", fpga.latency_s * 1e6,
+             f"fmax_MHz={fpga.fmax_hz / 1e6:.0f}")
+        for lib in ("cusparse", "sputnik"):
+            gl = baselines.gpu_latency_s(dim, 0.98, lib)
+            emit(f"fig13/dim={dim}/{lib}", gl * 1e6)
+            emit(f"fig14/dim={dim}/{lib}_speedup", gl / fpga.latency_s)
+
+
+def fig15_16_sparsity_sweep():
+    for es in (0.70, 0.75, 0.80, 0.85, 0.90, 0.95, 0.98):
+        fpga = costmodel.design_point(1024, 1024, es, mode="csd")
+        emit(f"fig15/es={es:.2f}/fpga", fpga.latency_s * 1e6)
+        for lib in ("cusparse", "sputnik"):
+            gl = baselines.gpu_latency_s(1024, es, lib)
+            emit(f"fig15/es={es:.2f}/{lib}", gl * 1e6)
+            emit(f"fig16/es={es:.2f}/{lib}_speedup", gl / fpga.latency_s)
+
+
+def fig17_18_batching():
+    for dim, fig in ((1024, "fig17"), (64, "fig18")):
+        fpga = costmodel.design_point(dim, dim, 0.95)
+        for batch in (1, 2, 4, 8, 16, 32, 64):
+            fl = fpga.batch_latency_s(batch)
+            gl = baselines.gpu_latency_s(dim, 0.95, "cusparse", batch)
+            emit(f"{fig}/batch={batch}/speedup", gl / fl,
+                 f"fpga_us={fl * 1e6:.3f};gpu_us={gl * 1e6:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Section VII-B — SIGMA comparison (Figs 19-23)
+# ---------------------------------------------------------------------------
+def fig19_20_sigma_dim():
+    for dim in (64, 128, 256, 512, 1024, 2048, 4096):
+        fpga = costmodel.design_point(dim, dim, 0.98)
+        sl = baselines.sigma_latency_s(dim, 0.98)
+        emit(f"fig19/dim={dim}/sigma", sl * 1e6,
+             f"fpga_us={fpga.latency_s * 1e6:.3f}")
+        emit(f"fig20/dim={dim}/speedup", sl / fpga.latency_s)
+
+
+def fig21_22_sigma_sparsity():
+    for es in (0.70, 0.75, 0.80, 0.85, 0.90, 0.95, 0.98):
+        fpga = costmodel.design_point(1024, 1024, es, mode="csd")
+        sl = baselines.sigma_latency_s(1024, es)
+        emit(f"fig21/es={es:.2f}/sigma", sl * 1e6,
+             f"fpga_us={fpga.latency_s * 1e6:.3f}")
+        emit(f"fig22/es={es:.2f}/speedup", sl / fpga.latency_s)
+
+
+def fig23_sigma_batching():
+    fpga = costmodel.design_point(1024, 1024, 0.95)
+    for batch in (1, 2, 4, 8, 16, 32, 64):
+        sl = baselines.sigma_latency_s(1024, 0.95, batch=batch)
+        fl = fpga.batch_latency_s(batch)
+        emit(f"fig23/batch={batch}/speedup", sl / fl,
+             f"sigma_us={sl * 1e6:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Workload reproduction: ESN quality, fp32 vs the paper's integer arithmetic
+# ---------------------------------------------------------------------------
+def esn_quality():
+    import jax.numpy as jnp
+    from repro.core.esn import (ESNConfig, fit_readout, init_esn, nrmse,
+                                predict, run_reservoir)
+    from repro.data.pipeline import (channel_equalization, mackey_glass,
+                                     narma10)
+
+    tasks = {}
+    mg = mackey_glass(1500, seed=0)
+    tasks["mackey_glass"] = (mg[:-1, None], mg[1:, None])
+    u, y = narma10(1500, seed=0)
+    tasks["narma10"] = (u[:, None], y[:, None])
+    u, y = channel_equalization(1500, seed=0)
+    tasks["channel_eq"] = (u[:, None] / 10.0, y[:, None])
+
+    for task, (u, y) in tasks.items():
+        for mode in ("fp32", "int8-pn", "int8-csd"):
+            cfg = ESNConfig(reservoir_dim=300, element_sparsity=0.75,
+                            mode=mode, seed=1, block=64)
+            p = init_esn(cfg)
+            t0 = time.perf_counter()
+            states = run_reservoir(p, jnp.asarray(u))
+            p = fit_readout(p, states[200:], jnp.asarray(y[200:]), lam=1e-6)
+            err = float(nrmse(predict(p, states[200:]), jnp.asarray(y[200:])))
+            dt = (time.perf_counter() - t0) * 1e6
+            emit(f"esn/{task}/{mode}", dt / len(u), f"nrmse={err:.4f}")
+
+
+# ---------------------------------------------------------------------------
+# TPU-side: measured kernel wall-times (interpret mode; CPU container)
+# ---------------------------------------------------------------------------
+def kernel_walltimes():
+    import jax.numpy as jnp
+    from repro.core.sparse import FixedMatrix
+    from repro.kernels.bitplane_gemv.ops import BitplaneGemv
+
+    rng = np.random.default_rng(0)
+    d = random_sparse_matrix(256, 256, 0.95, rng)
+    fm = FixedMatrix.compile(d, mode="csd", block=128, rng=rng)
+    op = BitplaneGemv(fm)
+    x = jnp.asarray(rng.integers(-128, 128, (8, 256)), jnp.int32)
+    op(x).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    n = 20
+    for _ in range(n):
+        op(x).block_until_ready()
+    emit("kernel/bitplane_gemv_256x256_interpret",
+         (time.perf_counter() - t0) / n * 1e6,
+         f"ones={fm.ones};planes_kept={sum(op.plane_mask)}")
+
+
+ALL = [fig05_bit_sparsity, fig06_element_vs_bit_sparse, fig07_matrix_size,
+       fig08_bitwidth, fig09_csd, fig10_large_area, fig11_large_fmax,
+       fig12_large_power, fig13_14_dim_sweep, fig15_16_sparsity_sweep,
+       fig17_18_batching, fig19_20_sigma_dim, fig21_22_sigma_sparsity,
+       fig23_sigma_batching, esn_quality, kernel_walltimes]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        print(f"# {fn.__name__} done in {dt:.1f}s", file=sys.stderr)
+    for row in ROWS:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+- ``csd`` / ``bitplanes``: digit recoding and plane decomposition (Secs III/V)
+- ``spatial``: register-level emulator of the bit-serial design (oracle)
+- ``costmodel`` / ``baselines``: FPGA + GPU/SIGMA analytic models (Secs IV-VII)
+- ``sparse``: FixedMatrix — offline-compiled fixed sparse matrices for TPU
+- ``esn`` / ``ridge``: reservoir computing on top of FixedMatrix (Sec II)
+"""
+
+from repro.core.bitplanes import DigitPlanes, decompose, pn_split  # noqa: F401
+from repro.core.costmodel import design_point, expected_ones  # noqa: F401
+from repro.core.csd import convert_to_csd, csd_transform  # noqa: F401
+from repro.core.esn import ESNConfig, init_esn, run_reservoir  # noqa: F401
+from repro.core.sparse import BlockSparse, FixedMatrix  # noqa: F401

@@ -1,0 +1,83 @@
+"""Ridge-regression readout training — the only *trained* piece of an ESN.
+
+"W_out is trained via linear regression ... which completely eliminates the
+need for error backpropagation" (paper Sec. II).  The solver accumulates the
+Gram statistics ``X^T X`` and ``X^T Y`` so it streams over arbitrarily long
+state trajectories (and sums across data-parallel shards with one psum),
+then solves the regularized normal equations once.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "gram_accumulate",
+    "ridge_solve",
+    "ridge_fit",
+    "ridge_fit_sharded",
+]
+
+
+def gram_accumulate(x: jnp.ndarray, y: jnp.ndarray,
+                    carry: tuple[jnp.ndarray, jnp.ndarray] | None = None
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Accumulate (X^T X, X^T Y) in float32 from a chunk of rows."""
+    x = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    y = y.reshape(-1, y.shape[-1]).astype(jnp.float32)
+    xtx = x.T @ x
+    xty = x.T @ y
+    if carry is not None:
+        xtx = xtx + carry[0]
+        xty = xty + carry[1]
+    return xtx, xty
+
+
+@partial(jax.jit, static_argnames=())
+def ridge_solve(xtx: jnp.ndarray, xty: jnp.ndarray, lam: float | jnp.ndarray
+                ) -> jnp.ndarray:
+    """Solve (X^T X + lam I) W = X^T Y.
+
+    Uses a symmetric eigendecomposition rather than Cholesky: reservoir Gram
+    matrices are often near-singular (strongly correlated states) and f32
+    Cholesky NaNs where eigh merely clamps the tiny eigenvalues, which the
+    ridge term then regularizes.
+    """
+    evals, evecs = jnp.linalg.eigh(xtx)
+    evals = jnp.maximum(evals, 0.0)  # clamp negative round-off
+    inv = 1.0 / (evals + lam)
+    return evecs @ (inv[:, None] * (evecs.T @ xty))
+
+
+def ridge_fit(x: jnp.ndarray, y: jnp.ndarray, lam: float = 1e-6) -> jnp.ndarray:
+    """One-shot ridge fit: returns W_out with ``y ~ x @ W_out``.
+
+    The Gram statistics accumulate on-device (f32, distributed-friendly);
+    the final (d x d) solve runs on host in float64 — reservoir Grams are
+    ill-conditioned enough that f32 solves visibly hurt readout quality,
+    and the solve is a one-time O(d^3) epilogue.
+    """
+    import numpy as np
+
+    xtx, xty = gram_accumulate(x, y)
+    a = np.asarray(xtx, dtype=np.float64)
+    b = np.asarray(xty, dtype=np.float64)
+    w = np.linalg.solve(a + lam * np.eye(a.shape[0]), b)
+    return jnp.asarray(w, dtype=jnp.float32)
+
+
+def ridge_fit_sharded(x: jnp.ndarray, y: jnp.ndarray, lam: float,
+                      axis_name: str) -> jnp.ndarray:
+    """Ridge fit inside shard_map/pmap: rows sharded over ``axis_name``.
+
+    Each shard accumulates its local Gram block; one psum of the
+    (d x d) / (d x k) statistics replaces gathering the raw trajectories —
+    the communication volume is independent of sequence length.
+    """
+    xtx, xty = gram_accumulate(x, y)
+    xtx = jax.lax.psum(xtx, axis_name)
+    xty = jax.lax.psum(xty, axis_name)
+    return ridge_solve(xtx, xty, lam)

@@ -1,0 +1,210 @@
+"""Fixed sparse matrices "compiled" for TPU — the paper's core, JAX-side.
+
+The FPGA flow takes a fixed matrix and runs it through synthesis/place&route
+once, paying the specialization cost offline.  The TPU analogue here is
+:class:`FixedMatrix`: an offline compile step that
+
+  1. quantizes the (frozen) matrix to signed ``weight_bits`` integers,
+  2. decomposes it into PN or CSD digit planes (``core.bitplanes``),
+  3. extracts a static block-sparse (BCSR) structure whose zero blocks are
+     culled — at *trace* time, like the paper culls adders at synthesis,
+  4. attaches the FPGA cost model so every instance reports the same
+     area/latency/power numbers the paper's design flow would.
+
+The matmul implementations here are the pure-jnp reference paths; the Pallas
+kernels in ``repro.kernels`` consume the same static structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplanes as bp
+from repro.core import costmodel
+
+__all__ = ["BlockSparse", "FixedMatrix", "random_sparse_matrix"]
+
+
+def random_sparse_matrix(
+    rows: int,
+    cols: int,
+    element_sparsity: float,
+    rng: np.random.Generator,
+    weight_bits: int | None = None,
+    dtype=np.float32,
+) -> np.ndarray:
+    """Random fixed matrix with the paper's initialization scheme.
+
+    Integer mode ("weights are sampled from a uniform distribution of all
+    possible values for the given bit-width", Sec. IV) when ``weight_bits``
+    is given; float uniform(-1, 1) otherwise.  Elements are then zeroed
+    until the requested element sparsity is met.
+    """
+    if weight_bits is not None:
+        lo, hi = -(1 << (weight_bits - 1)), (1 << (weight_bits - 1))
+        m = rng.integers(lo, hi, size=(rows, cols)).astype(np.float64)
+    else:
+        m = rng.uniform(-1.0, 1.0, size=(rows, cols))
+    mask = rng.random((rows, cols)) >= element_sparsity
+    return (m * mask).astype(dtype)
+
+
+@dataclasses.dataclass
+class BlockSparse:
+    """Static BCSR: block mask decided offline, data gathered per-nnz-block.
+
+    The block mask is a *Python-level* constant: kernels and reference paths
+    iterate only the nonzero blocks, so zero blocks cost nothing at runtime —
+    the trace-time analogue of the paper's constant propagation.
+    """
+
+    shape: tuple[int, int]
+    block: int
+    block_rows: np.ndarray        # (n_nnz,) int32 — block row index
+    block_cols: np.ndarray        # (n_nnz,) int32 — block col index
+    data: jnp.ndarray             # (n_nnz, block, block)
+    mask: np.ndarray              # (nbr, nbc) bool
+
+    @classmethod
+    def from_dense(cls, dense: np.ndarray, block: int = 128) -> "BlockSparse":
+        r, c = dense.shape
+        nbr, nbc = math.ceil(r / block), math.ceil(c / block)
+        padded = np.zeros((nbr * block, nbc * block), dtype=dense.dtype)
+        padded[:r, :c] = dense
+        tiles = padded.reshape(nbr, block, nbc, block).transpose(0, 2, 1, 3)
+        mask = np.abs(tiles).sum(axis=(2, 3)) != 0
+        br, bc = np.nonzero(mask)
+        data = jnp.asarray(tiles[br, bc])  # (n_nnz, block, block)
+        return cls(shape=(r, c), block=block, block_rows=br.astype(np.int32),
+                   block_cols=bc.astype(np.int32), data=data, mask=mask)
+
+    @property
+    def n_blocks_total(self) -> int:
+        return int(self.mask.size)
+
+    @property
+    def n_blocks_nnz(self) -> int:
+        return int(self.mask.sum())
+
+    @property
+    def density(self) -> float:
+        return self.n_blocks_nnz / max(self.n_blocks_total, 1)
+
+    def to_dense(self) -> np.ndarray:
+        nbr, nbc = self.mask.shape
+        out = np.zeros((nbr * self.block, nbc * self.block),
+                       dtype=np.asarray(self.data).dtype)
+        data = np.asarray(self.data)
+        for i, (br, bc) in enumerate(zip(self.block_rows, self.block_cols)):
+            out[br * self.block:(br + 1) * self.block,
+                bc * self.block:(bc + 1) * self.block] = data[i]
+        return out[: self.shape[0], : self.shape[1]]
+
+    def matmul_ref(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Pure-jnp blocked ``x @ M`` over nonzero blocks only.
+
+        x: (..., rows) -> (..., cols).  The Python loop is over the *static*
+        nonzero-block list, so XLA sees a fixed unrolled program — zero
+        blocks are culled exactly like the paper's degenerate adders.
+        """
+        r, c = self.shape
+        nbr, nbc = self.mask.shape
+        xpad = jnp.zeros(x.shape[:-1] + (nbr * self.block,), x.dtype
+                         ).at[..., :r].set(x)
+        out = [None] * nbc
+        for i in range(len(self.block_rows)):
+            br, bc = int(self.block_rows[i]), int(self.block_cols[i])
+            xs = xpad[..., br * self.block:(br + 1) * self.block]
+            contrib = xs @ self.data[i].astype(x.dtype)
+            out[bc] = contrib if out[bc] is None else out[bc] + contrib
+        zeros = jnp.zeros(x.shape[:-1] + (self.block,), x.dtype)
+        cols = [o if o is not None else zeros for o in out]
+        return jnp.concatenate(cols, axis=-1)[..., :c]
+
+
+@dataclasses.dataclass
+class FixedMatrix:
+    """A frozen matrix compiled for fast fixed-structure multiplication.
+
+    ``y = x @ dense`` is reproduced three ways, all sharing one offline
+    compile: exact integer digit-plane math (mirrors the FPGA bit-serial
+    semantics), dequantized block-sparse float math, and — via
+    ``repro.kernels`` — Pallas TPU kernels over the same static structure.
+    """
+
+    shape: tuple[int, int]
+    weight_bits: int
+    mode: Literal["pn", "csd"]
+    scale: float                      # dequant scale: dense ~ q * scale
+    planes: bp.DigitPlanes
+    blocks: BlockSparse
+    q: jnp.ndarray                    # (rows, cols) int8 quantized weights
+    element_sparsity: float
+
+    # -- compile ------------------------------------------------------------
+    @classmethod
+    def compile(
+        cls,
+        dense: np.ndarray,
+        weight_bits: int = 8,
+        mode: Literal["pn", "csd"] = "csd",
+        block: int = 128,
+        rng: np.random.Generator | None = None,
+    ) -> "FixedMatrix":
+        dense = np.asarray(dense, dtype=np.float64)
+        qmax = (1 << (weight_bits - 1)) - 1
+        amax = np.abs(dense).max()
+        scale = (amax / qmax) if amax > 0 else 1.0
+        q = np.clip(np.round(dense / scale), -qmax - 1, qmax).astype(np.int64)
+        planes = bp.decompose(q, weight_bits, mode=mode, rng=rng)
+        blocks = BlockSparse.from_dense(q.astype(np.float32) * scale, block)
+        sparsity = 1.0 - (np.count_nonzero(q) / q.size)
+        return cls(shape=dense.shape, weight_bits=weight_bits, mode=mode,
+                   scale=float(scale), planes=planes, blocks=blocks,
+                   q=jnp.asarray(q, dtype=jnp.int8),
+                   element_sparsity=float(sparsity))
+
+    # -- cost reporting -------------------------------------------------------
+    @property
+    def ones(self) -> int:
+        return self.planes.ones
+
+    def fpga_cost(self, input_bits: int = 8) -> costmodel.FPGADesignPoint:
+        return costmodel.design_point(
+            rows=self.shape[0], cols=self.shape[1],
+            element_sparsity=self.element_sparsity,
+            weight_bits=self.weight_bits, input_bits=input_bits,
+            mode=self.mode, ones=self.ones)
+
+    # -- math ----------------------------------------------------------------
+    def matvec_int_exact(self, a: jnp.ndarray) -> jnp.ndarray:
+        """Exact ``a @ q`` through shifted digit-plane products (int32).
+
+        Mirrors the FPGA dataflow: one single-bit dot product per plane,
+        shift-combined, PN subtracted.  ``a``: (..., rows) integer.
+        """
+        a = a.astype(jnp.int32)
+        pos = jnp.asarray(self.planes.pos.astype(np.int8))
+        neg = jnp.asarray(self.planes.neg.astype(np.int8))
+        out = jnp.zeros(a.shape[:-1] + (self.shape[1],), jnp.int32)
+        for b in range(self.planes.width):
+            pterm = a @ pos[b].astype(jnp.int32)
+            nterm = a @ neg[b].astype(jnp.int32)
+            out = out + ((pterm - nterm) << b)
+        return out
+
+    def matvec_int_dense_ref(self, a: jnp.ndarray) -> jnp.ndarray:
+        return a.astype(jnp.int32) @ self.q.astype(jnp.int32)
+
+    def matmul(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Dequantized float path over the culled block structure."""
+        return self.blocks.matmul_ref(x)
+
+    def dense_f32(self) -> jnp.ndarray:
+        return self.q.astype(jnp.float32) * self.scale

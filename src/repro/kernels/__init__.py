@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- ``bitplane_gemv``: digit-plane fixed-matrix gemv (bit-serial analogue)
+- ``bcsr_matmul``: static block-culled sparse matmul (constant propagation)
+- ``reservoir_step``: fused ESN state update (the recurrent latency path)
+
+All kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling)
+and validated with interpret=True on CPU against pure-jnp oracles.
+EXAMPLE.md documents the per-kernel layout convention.
+"""

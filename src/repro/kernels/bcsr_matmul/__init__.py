@@ -1,0 +1,1 @@
+"""bcsr_matmul kernel package."""

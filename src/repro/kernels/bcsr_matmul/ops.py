@@ -1,0 +1,51 @@
+"""Jitted wrapper: BlockSparse -> sorted/padded tile list -> Pallas BCSR."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.sparse import BlockSparse
+from repro.kernels.bcsr_matmul.bcsr_matmul import bcsr_matmul
+
+
+class BcsrMatmul:
+    """Precompiled block-sparse multiplier for one fixed BlockSparse matrix.
+
+    Offline: sort tiles by (col, row) so output tiles accumulate on
+    consecutive grid steps, and pad a zero tile into every empty output
+    column so initialization covers the whole output.
+    """
+
+    def __init__(self, bs: BlockSparse, interpret: bool = True):
+        self.block = bs.block
+        nbr, nbc = bs.mask.shape
+        self.rows_pad = nbr * bs.block
+        self.cols_pad = nbc * bs.block
+        self.shape = bs.shape
+        self.interpret = interpret
+
+        data = np.asarray(bs.data)
+        cols = bs.block_cols.astype(np.int32)
+        rows = bs.block_rows.astype(np.int32)
+        # pad empty output columns with a zero tile
+        missing = sorted(set(range(nbc)) - set(cols.tolist()))
+        if missing:
+            zero = np.zeros((len(missing), bs.block, bs.block), data.dtype)
+            data = np.concatenate([data, zero], axis=0) if data.size else zero
+            cols = np.concatenate([cols, np.asarray(missing, np.int32)])
+            rows = np.concatenate([rows, np.zeros(len(missing), np.int32)])
+        order = np.lexsort((rows, cols))  # sort by col, then row
+        self.data = jnp.asarray(data[order])
+        self.cols = jnp.asarray(cols[order])
+        self.rows = jnp.asarray(rows[order])
+        self.n_tiles = int(self.data.shape[0])
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        b, r = x.shape
+        assert r == self.shape[0], (x.shape, self.shape)
+        if r != self.rows_pad:
+            x = jnp.pad(x, ((0, 0), (0, self.rows_pad - r)))
+        y = bcsr_matmul(x, self.data, self.cols, self.rows, self.cols_pad,
+                        block=self.block, interpret=self.interpret)
+        return y[:, : self.shape[1]]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the BCSR matmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bcsr_matmul_ref(x, blocks, block_cols, block_rows, out_cols, block=128):
+    """Dense reconstruction reference: scatter blocks, then one matmul."""
+    r = x.shape[-1]
+    dense = np.zeros((r, out_cols), dtype=np.asarray(blocks).dtype)
+    blks = np.asarray(blocks)
+    for i in range(blks.shape[0]):
+        br, bc = int(block_rows[i]), int(block_cols[i])
+        dense[br * block:(br + 1) * block, bc * block:(bc + 1) * block] += blks[i]
+    acc = jnp.float32 if x.dtype in (jnp.float32, jnp.bfloat16) else jnp.int32
+    return (x.astype(acc) @ jnp.asarray(dense).astype(acc))

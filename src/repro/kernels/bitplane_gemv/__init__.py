@@ -1,0 +1,1 @@
+"""bitplane_gemv kernel package."""

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the digit-plane gemv kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bitplane_gemv_ref(x: jnp.ndarray, digits: jnp.ndarray) -> jnp.ndarray:
+    """Exact integer ``x @ (sum_w 2^w digits[w])`` in int32.
+
+    x: (B, R) integer; digits: (W, R, C) in {-1, 0, 1}.
+    """
+    w = digits.shape[0]
+    xi = x.astype(jnp.int32)
+    out = jnp.zeros((x.shape[0], digits.shape[2]), jnp.int32)
+    for b in range(w):
+        out = out + ((xi @ digits[b].astype(jnp.int32)) << b)
+    return out
+
+
+def dense_gemv_ref(x: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Direct dense integer product (ground truth for both paths)."""
+    return x.astype(jnp.int32) @ v.astype(jnp.int32)

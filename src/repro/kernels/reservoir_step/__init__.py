@@ -1,0 +1,1 @@
+"""reservoir_step kernel package."""

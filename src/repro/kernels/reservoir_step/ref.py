@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused reservoir step."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def reservoir_step_ref(x, w, u, w_in, leak: float = 1.0):
+    pre = u.astype(jnp.float32) @ w_in.astype(jnp.float32) \
+        + x.astype(jnp.float32) @ w.astype(jnp.float32)
+    return (1.0 - leak) * x.astype(jnp.float32) + leak * jnp.tanh(pre)

@@ -1,0 +1,1 @@
+"""Launch layer: mesh, steps, dry-run, roofline."""

@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape x mesh) cell: build the step function,
+``.lower().compile()`` it against ShapeDtypeStruct inputs (no allocation),
+and record ``memory_analysis()`` / ``cost_analysis()`` / walker-derived
+roofline inputs to a per-cell JSON under results/dryrun/.
+
+The XLA_FLAGS line above MUST precede any jax import: jax locks the device
+count at first init.  Cells run in subprocesses by default (isolation +
+cache-eviction between compiles on a 1-core container); ``--cell`` runs one
+cell inline.
+
+Usage:
+  python -m repro.launch.dryrun                 # all pending cells, subprocs
+  python -m repro.launch.dryrun --cell qwen3-32b train_4k --multi-pod
+  python -m repro.launch.dryrun --list          # show cell status
+"""
+
+import argparse
+import gzip
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool,
+              variant: str = "") -> Path:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{variant}" if variant else ""
+    return RESULTS / mesh_name / f"{arch}__{shape}{suffix}.json"
+
+
+def parse_overrides(pairs):
+    out = {}
+    for kv in pairs or []:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def run_cell_inline(arch: str, shape_name: str, multi_pod: bool,
+                    save_hlo: bool = True, overrides: dict | None = None,
+                    variant: str = "") -> dict:
+    import jax  # deferred: after XLA_FLAGS
+    from repro.configs import SHAPES, get_config, supports_shape
+    from repro.launch import hlo_cost
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_cell
+    from repro.models.transformer import LM
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    out: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "n_devices": 512 if multi_pod else 256,
+                 "variant": variant, "overrides": overrides or {}}
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        out["status"] = "skipped"
+        out["reason"] = why
+        return out
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered, meta = lower_cell(cfg, shape, mesh)
+    out["t_lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    out["t_compile_s"] = round(time.time() - t0, 1)
+    out.update(meta)
+
+    ma = compiled.memory_analysis()
+    out["memory_per_device"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_bytes": int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                          + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis() or {}
+    out["cost_analysis_raw"] = {
+        "flops": float(ca.get("flops", -1)),
+        "bytes_accessed": float(ca.get("bytes accessed", -1)),
+        "note": "while bodies counted once by XLA; see hlo_walk for "
+                "trip-multiplied numbers",
+    }
+
+    t0 = time.time()
+    hlo_text = compiled.as_text()
+    walk = hlo_cost.analyze_hlo(hlo_text)
+    out["hlo_walk"] = walk
+    out["t_walk_s"] = round(time.time() - t0, 1)
+    out["param_count"] = LM(cfg).param_count()
+    out["status"] = "ok"
+
+    if save_hlo:
+        p = cell_path(arch, shape_name, multi_pod, variant)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        with gzip.open(p.with_suffix(".hlo.txt.gz"), "wt") as f:
+            f.write(hlo_text)
+    return out
+
+
+def all_cells():
+    from repro.configs import SHAPES, list_archs
+    for arch in list_archs():
+        for shape in SHAPES:
+            for multi_pod in (False, True):
+                yield arch, shape, multi_pod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", nargs=2, metavar=("ARCH", "SHAPE"))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="FIELD=VALUE")
+    args = ap.parse_args()
+
+    if args.list:
+        for arch, shape, mp in all_cells():
+            p = cell_path(arch, shape, mp)
+            status = "-"
+            if p.exists():
+                status = json.loads(p.read_text()).get("status", "?")
+            print(f"{arch:22s} {shape:12s} {'2x16x16' if mp else '16x16':8s} {status}")
+        return
+
+    if args.cell:
+        arch, shape = args.cell
+        p = cell_path(arch, shape, args.multi_pod, args.variant)
+        if p.exists() and not args.force:
+            print(f"cached: {p}")
+            return
+        try:
+            res = run_cell_inline(arch, shape, args.multi_pod,
+                                  save_hlo=not args.no_hlo,
+                                  overrides=parse_overrides(args.override),
+                                  variant=args.variant)
+        except Exception as e:
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(res, indent=2))
+        print(json.dumps({k: v for k, v in res.items()
+                          if k not in ("traceback",)}, indent=2))
+        return
+
+    # driver mode: subprocess per pending cell
+    for arch, shape, mp in all_cells():
+        p = cell_path(arch, shape, mp)
+        if p.exists() and not args.force:
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--cell", arch, shape]
+        if mp:
+            cmd.append("--multi-pod")
+        if args.no_hlo:
+            cmd.append("--no-hlo")
+        print(f"=== {arch} {shape} {'2x16x16' if mp else '16x16'} ===",
+              flush=True)
+        t0 = time.time()
+        try:
+            subprocess.run(cmd, timeout=args.timeout, check=False)
+        except subprocess.TimeoutExpired:
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(json.dumps({
+                "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if mp else "16x16",
+                "status": "timeout", "timeout_s": args.timeout}))
+        print(f"    ({time.time() - t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

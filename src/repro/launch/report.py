@@ -1,0 +1,53 @@
+"""Generate EXPERIMENTS.md sections from dry-run results (idempotent)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.launch import roofline
+
+ROOT = Path(__file__).resolve().parents[3]
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | status | step | mem/dev GB | peak fits "
+            "16GB | dot FLOPs/dev | collective B/dev | compile s |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for mesh_dir, mesh_name in (("pod16x16", "16x16"),
+                                ("pod2x16x16", "2x16x16")):
+        for rec in roofline.load_all(mesh_dir):
+            if rec.get("status") == "ok":
+                m = rec["memory_per_device"]
+                tot = (m["argument_bytes"] + m["temp_bytes"]) / 2 ** 30
+                rows.append(
+                    f"| {rec['arch']} | {rec['shape']} | {mesh_name} | ok "
+                    f"| {rec.get('step', '')} | {tot:.1f} "
+                    f"| {'yes' if tot <= 16 else 'NO'} "
+                    f"| {rec['hlo_walk']['dot_flops']:.2e} "
+                    f"| {rec['hlo_walk']['total_collective_bytes']:.2e} "
+                    f"| {rec.get('t_compile_s', '')} |")
+            elif rec.get("status") == "skipped":
+                rows.append(f"| {rec['arch']} | {rec['shape']} | {mesh_name} "
+                            f"| skipped (documented) | — | — | — | — | — | — |")
+            else:
+                rows.append(f"| {rec['arch']} | {rec['shape']} | {mesh_name} "
+                            f"| **{rec.get('status')}** | — | — | — | — | — | — |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    recs = roofline.load_all("pod16x16")
+    reports = [r for r in (roofline.cell_report(x) for x in recs) if r]
+    return roofline.to_markdown(reports)
+
+
+def main():
+    print("== dryrun ==")
+    print(dryrun_table())
+    print("\n== roofline ==")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

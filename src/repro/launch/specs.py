@@ -1,0 +1,129 @@
+"""ShapeDtypeStruct stand-ins for every model input, with shardings.
+
+``input_specs`` produces the exact pytrees each step function consumes —
+weak-type-correct and shardable, with zero device allocation — so the
+dry-run can ``.lower().compile()`` any (arch x shape x mesh) cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.transformer import LM
+from repro.parallel.sharding import (batch_spec, cache_sharding,
+                                     data_axis_names, param_shardings)
+
+N_PATCHES = 256  # vlm frontend stub: image tokens prepended to the text
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _bspec(mesh, ndim, batchable=True):
+    d = data_axis_names(mesh)
+    first = (d if len(d) > 1 else d[0]) if (d and batchable) else None
+    return NamedSharding(mesh, P(*(first,) + (None,) * (ndim - 1)))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict:
+    """Training/prefill batch structs for one shape cell."""
+    b, s = shape.global_batch, shape.seq_len
+    from repro.parallel.sharding import _axis_size  # local import
+    nd = _axis_size(mesh, data_axis_names(mesh))
+    batchable = b % nd == 0 and b >= nd
+    out = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((b, s + 1), jnp.int32, _bspec(mesh, 2, batchable))
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32, _bspec(mesh, 2, batchable))
+    if cfg.frontend == "vision":
+        out["patches"] = _sds((b, N_PATCHES, cfg.d_model), jnp.bfloat16,
+                              _bspec(mesh, 3, batchable))
+    if cfg.encoder is not None:
+        out["frames"] = _sds((b, cfg.encoder.seq_len, cfg.d_model),
+                             jnp.bfloat16, _bspec(mesh, 3, batchable))
+    return out
+
+
+def params_specs(lm: LM, mesh, fsdp: bool = True,
+                 expert_fsdp: bool | None = None) -> tuple:
+    """(param ShapeDtypeStructs with shardings, shardings tree)."""
+    pa = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    ef = lm.cfg.expert_fsdp if expert_fsdp is None else expert_fsdp
+    shardings = param_shardings(pa.axes, pa.params, mesh, fsdp=fsdp,
+                                use_tp=lm.cfg.use_tp,
+                                expert_fsdp=ef)
+    structs = jax.tree.map(lambda sds, sh: _sds(sds.shape, sds.dtype, sh),
+                           pa.params, shardings)
+    return structs, shardings
+
+
+def opt_state_specs(param_structs, mesh, dtype: str = "float32") -> tuple:
+    """AdamW (m, v, step) structs mirroring the parameter shardings."""
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    f32 = lambda sds: _sds(sds.shape, dt, sds.sharding)
+    m = jax.tree.map(f32, param_structs)
+    v = jax.tree.map(f32, param_structs)
+    step = _sds((), jnp.int32, NamedSharding(mesh, P()))
+    return {"m": m, "v": v, "step": step}
+
+
+def _cache_leaf_sharding(path, sds, cfg: ModelConfig, mesh, stacked: bool):
+    """Per-leaf cache sharding by structural role (see parallel/sharding)."""
+    names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+    name = names[-1] if names else ""
+    shape = sds.shape
+    off = 1 if (stacked and "groups" in names) else 0
+    rank = len(shape)
+
+    def build(**kw):
+        inner = cache_sharding(mesh, shape[off:], batch_dim=0, **kw)
+        spec = list(inner.spec) + [None] * (rank - off - len(inner.spec))
+        return NamedSharding(mesh, P(*([None] * off + spec)))
+
+    if name in ("k", "v") and rank - off == 4:
+        return build(n_kv=cfg.n_kv_heads, kv_dim=2, seq_dim=1)
+    if name in ("c_kv", "k_rope") and rank - off == 3:
+        return build(seq_dim=1)
+    if name == "pos":
+        return build()
+    if name == "enc":
+        return build()
+    if name in ("h", "conv"):               # rglru state: width over model
+        return build(n_kv=cfg.lru_dim, kv_dim=rank - off - 1)
+    if name in ("c", "n", "m") and rank - off >= 2:   # xlstm: heads
+        return build(n_kv=cfg.n_heads, kv_dim=1)
+    return NamedSharding(mesh, P(*([None] * rank)))
+
+
+def cache_specs(lm: LM, shape: ShapeSpec, mesh) -> Any:
+    """Decode caches as ShapeDtypeStructs for a full-length context."""
+    cfg = lm.cfg
+    b = shape.global_batch
+    cache_len = shape.seq_len
+    caches = jax.eval_shape(lambda: lm.init_caches(b, cache_len))
+    if cfg.encoder is not None:
+        enc = _sds((b, cfg.encoder.seq_len, cfg.d_model), jnp.bfloat16)
+        caches = dict(caches)
+        caches["enc"] = enc
+
+    def leaf(path, sds):
+        return _sds(sds.shape, sds.dtype,
+                    _cache_leaf_sharding(path, sds, cfg, mesh,
+                                         cfg.scan_layers))
+
+    return jax.tree_util.tree_map_with_path(leaf, caches)
+
+
+def token_spec(shape: ShapeSpec, mesh):
+    b = shape.global_batch
+    from repro.parallel.sharding import _axis_size
+    nd = _axis_size(mesh, data_axis_names(mesh))
+    return _sds((b, 1), jnp.int32, _bspec(mesh, 2, b % nd == 0 and b >= nd))

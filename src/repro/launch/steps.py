@@ -1,0 +1,168 @@
+"""Step builders: train / prefill / decode, mesh-aware.
+
+Each builder returns (fn, example_args) ready for
+``jax.jit(fn).lower(*example_args).compile()`` — the dry-run entry point —
+and the same functions drive real training/serving in examples/.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch import specs as specs_lib
+from repro.models.transformer import LM, ParallelCtx
+from repro.optim import adamw
+from repro.parallel.act import activation_mesh
+from repro.parallel.sharding import data_axis_names
+
+
+def make_ctx(mesh, cfg=None) -> ParallelCtx:
+    if mesh is None:
+        return ParallelCtx()
+    daxes = data_axis_names(mesh) or ("data",)
+    if cfg is not None and not cfg.use_tp and "model" in mesh.axis_names:
+        daxes = daxes + ("model",)  # model axis joins DP/FSDP
+    fsdp = cfg.expert_fsdp if cfg is not None else True
+    return ParallelCtx(mesh=mesh, data_axes=daxes, fsdp=fsdp)
+
+
+def _with_act_ctx(fn, mesh, ctx):
+    """Run fn under the activation-sharding context so the in-model
+    ``shard_batch`` anchors bake constraints into the traced program."""
+    if mesh is None:
+        return fn
+
+    def wrapped(*args, **kw):
+        with activation_mesh(mesh, ctx.data_axes, ctx.model_axis):
+            return fn(*args, **kw)
+
+    return wrapped
+
+
+def make_train_step(lm: LM, mesh, opt_cfg: adamw.AdamWConfig | None = None,
+                    grad_shardings=None):
+    """grad_shardings: optional pytree of NamedSharding for the gradient
+    accumulator (ZeRO: shard grads/optimizer even where the weights are
+    kept resident, so per-microbatch reductions become reduce-scatters)."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    ctx = make_ctx(mesh, lm.cfg)
+    k = max(lm.cfg.microbatches, 1)
+    acc_dtype = (jnp.bfloat16 if lm.cfg.opt_dtype == "bfloat16"
+                 else jnp.float32)
+
+    def constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: lm.loss(p, batch, ctx))(params)
+
+    def train_step(state, batch):
+        if k == 1:
+            loss, grads = grads_of(state["params"], batch)
+        else:
+            # gradient accumulation: activations live for one microbatch at
+            # a time; the f32 grad accumulator inherits the param shardings.
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((k, b // k) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            params = state["params"]
+
+            def acc_step(carry, mb):
+                tot_loss, acc = carry
+                loss, grads = grads_of(params, mb)
+                acc = constrain(jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dtype), acc, grads))
+                return (tot_loss + loss, acc), None
+
+            zeros = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params))
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / k
+            grads = jax.tree.map(lambda g: g / k, grads)
+        new_params, new_opt, metrics = adamw.apply_updates(
+            state["params"], grads, state["opt"], opt_cfg)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, **metrics})
+
+    return _with_act_ctx(train_step, mesh, ctx)
+
+
+def make_prefill_step(lm: LM, mesh, cache_len: int):
+    ctx = make_ctx(mesh, lm.cfg)
+
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, cache_len=cache_len, ctx=ctx)
+
+    return _with_act_ctx(prefill_step, mesh, ctx)
+
+
+def make_decode_step(lm: LM, mesh):
+    ctx = make_ctx(mesh, lm.cfg)
+
+    def decode_step(params, caches, token):
+        return lm.decode_step(params, caches, token, ctx=ctx)
+
+    return _with_act_ctx(decode_step, mesh, ctx)
+
+
+def lower_cell(arch_cfg: ModelConfig, shape: ShapeSpec, mesh,
+               donate: bool = True):
+    """Build + lower the step for one (arch x shape x mesh) cell.
+
+    Returns (lowered, meta) where meta records what was lowered.
+    """
+    lm = LM(arch_cfg)
+    serving = shape.kind != "train"
+    fsdp = arch_cfg.fsdp and (arch_cfg.serving_fsdp if serving else True)
+    param_structs, param_shardings = specs_lib.params_specs(lm, mesh,
+                                                            fsdp=fsdp)
+
+    if shape.kind != "train" and arch_cfg.frozen_sparse_serving:
+        # paper technique: serving weights are frozen -> int8 storage
+        from repro.models.quantize import quant_struct_like
+        param_structs = quant_struct_like(param_structs)
+
+    if shape.kind == "train":
+        grad_sh = None
+        opt_base = param_structs
+        if not arch_cfg.expert_fsdp:
+            # ZeRO: grads + optimizer states fully sharded even though the
+            # expert weights stay EP-resident
+            _, grad_sh = specs_lib.params_specs(lm, mesh, fsdp=True,
+                                                expert_fsdp=True)
+            opt_base = jax.tree.map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=sh),
+                param_structs, grad_sh)
+        opt = specs_lib.opt_state_specs(opt_base, mesh,
+                                        dtype=arch_cfg.opt_dtype)
+        state = {"params": param_structs, "opt": opt}
+        batch = specs_lib.batch_specs(arch_cfg, shape, mesh)
+        fn = make_train_step(lm, mesh, grad_shardings=grad_sh)
+        jitted = jax.jit(fn, donate_argnums=(0,) if donate else ())
+        lowered = jitted.lower(state, batch)
+        meta = {"step": "train_step", "donated": "state"}
+    elif shape.kind == "prefill":
+        batch = specs_lib.batch_specs(arch_cfg, shape, mesh)
+        fn = make_prefill_step(lm, mesh, cache_len=shape.seq_len)
+        jitted = jax.jit(fn)
+        lowered = jitted.lower(param_structs, batch)
+        meta = {"step": "prefill_step"}
+    else:  # decode
+        caches = specs_lib.cache_specs(lm, shape, mesh)
+        token = specs_lib.token_spec(shape, mesh)
+        fn = make_decode_step(lm, mesh)
+        jitted = jax.jit(fn, donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(param_structs, caches, token)
+        meta = {"step": "serve_step", "donated": "caches"}
+    return lowered, meta

@@ -1,0 +1,1 @@
+"""Model substrate (attention, MoE, recurrent blocks, assembly)."""

@@ -1,0 +1,200 @@
+"""Attention: GQA/MQA with chunked online-softmax, local windows, KV caches.
+
+Long sequences never materialize the full (Sq, Skv) score matrix: the
+chunked path scans KV blocks with running (max, sum, acc) statistics —
+flash-attention dataflow in pure JAX, differentiable through ``lax.scan``.
+
+Decode uses a position-tagged cache: a ``pos`` array rides along with k/v so
+global caches and ring-buffer (sliding-window) caches share one masking rule:
+``valid = (pos <= current) & (pos > current - window)``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.act import shard_batch
+
+NEG_INF = -1e30
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (ragged seqs, e.g. vlm
+    patch prefixes, still chunk evenly)."""
+    for c in range(min(target, n), 0, -1):
+        if n % c == 0:
+            return c
+    return n
+
+
+def _mask(pos_q, pos_k, causal: bool, window: Optional[int]):
+    """(..., q, k) boolean validity mask from absolute positions."""
+    m = jnp.ones((pos_q.shape[-1], pos_k.shape[-1]), bool)
+    if causal:
+        m &= pos_q[:, None] >= pos_k[None, :]
+    if window is not None:
+        m &= pos_q[:, None] - pos_k[None, :] < window
+    return m
+
+
+def _scores(q, k, softcap):
+    # q: (B, qc, Hkv, G, hd); k: (B, kc, Hkv, hd) -> (B, Hkv, G, qc, kc)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    softcap: Optional[float] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    dense_threshold: int = 2048,
+) -> jnp.ndarray:
+    """Grouped-query attention.
+
+    q: (B, Sq, Hq, hd); k/v: (B, Skv, Hkv, hd); Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill
+    continuation); scores are scaled by 1/sqrt(hd).
+
+    Returns (B, Sq, Hq, hd) in q.dtype.
+    """
+    # Anchor the global batch to the data axes: GSPMD loses the batch
+    # sharding through the nested flash-attention while loops otherwise.
+    q, k, v = shard_batch(q), shard_batch(k), shard_batch(v)
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]                    # MLA: v_dim may differ from q/k dim
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = (q * scale).reshape(b, sq, hkv, g, hd)
+
+    if skv <= dense_threshold:
+        s = _scores(qg, k, softcap)
+        pos_q = q_offset + jnp.arange(sq)
+        pos_k = jnp.arange(skv)
+        s = jnp.where(_mask(pos_q, pos_k, causal, window), s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+        return o.reshape(b, sq, hq, vd)
+
+    # --- chunked online-softmax path -------------------------------------
+    q_chunk = _pick_chunk(sq, q_chunk)
+    kv_chunk = _pick_chunk(skv, kv_chunk)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    qr = qg.reshape(b, nq, q_chunk, hkv, g, hd)
+    kr = k.reshape(b, nk, kv_chunk, hkv, hd)
+    vr = v.reshape(b, nk, kv_chunk, hkv, vd)
+
+    def one_q_chunk(qi, q_blk):
+        pos_q = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, k_blk, v_blk = inp
+            s = _scores(q_blk, k_blk, softcap)  # (B,Hkv,G,qc,kc)
+            pos_k = ki * kv_chunk + jnp.arange(kv_chunk)
+            valid = (pos_q[:, None] >= pos_k[None, :]) if causal else \
+                jnp.ones((q_chunk, kv_chunk), bool)
+            if window is not None:
+                valid &= pos_q[:, None] - pos_k[None, :] < window
+            s = jnp.where(valid, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            shard_batch(jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)),
+            shard_batch(jnp.zeros((b, hkv, g, q_chunk), jnp.float32)),
+            shard_batch(jnp.zeros((b, hkv, g, q_chunk, vd), jnp.float32)),
+        )
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (ks, kr.swapaxes(0, 1), vr.swapaxes(0, 1)))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]        # (B,Hkv,G,qc,vd)
+        return shard_batch(o.transpose(0, 3, 1, 2, 4))     # (B,qc,Hkv,G,vd)
+
+    # flash-style bwd: recompute each q-chunk's inner pass instead of
+    # saving the (qc, kc) probability residuals of every (q, kv) step
+    chunk_fn = jax.checkpoint(one_q_chunk)
+    outs = jax.lax.map(lambda args: chunk_fn(*args),
+                       (jnp.arange(nq), qr.swapaxes(0, 1)))
+    o = shard_batch(outs.swapaxes(0, 1).reshape(b, sq, hq, vd))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV caches (position-tagged; supports global and ring/sliding layouts)
+# ---------------------------------------------------------------------------
+def init_cache(batch, length, n_kv, head_dim, dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def cache_prefill(cache, k, v, start: int = 0):
+    s = k.shape[1]
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), start, 1)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), start, 1)
+    pos = jnp.broadcast_to(start + jnp.arange(s, dtype=jnp.int32)[None, :],
+                           (k.shape[0], s))
+    cache["pos"] = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pos, start, 1)
+    return cache
+
+
+def cache_append(cache, k_new, v_new, index):
+    """Insert one token at absolute position ``index`` (ring if cache is
+    shorter than the stream)."""
+    length = cache["k"].shape[1]
+    slot = index % length
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    b = cache["pos"].shape[0]
+    pos_new = jnp.full((b, 1), index, jnp.int32)
+    cache["pos"] = jax.lax.dynamic_update_slice(cache["pos"], pos_new, (0, slot))
+    return cache
+
+
+def decode_attention(q, cache, index, *, window: Optional[int] = None,
+                     softcap: Optional[float] = None) -> jnp.ndarray:
+    """One-token attention against a position-tagged cache.
+
+    q: (B, 1, Hq, hd); returns (B, 1, Hq, hd).
+    """
+    b, _, hq, hd = q.shape
+    hkv = cache["k"].shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = (q * scale).reshape(b, 1, hkv, g, hd)
+    s = _scores(qg, cache["k"], softcap)[:, :, :, 0, :]  # (B,Hkv,G,S)
+    pos = cache["pos"]                                    # (B,S)
+    valid = (pos >= 0) & (pos <= index)
+    if window is not None:
+        valid &= pos > index - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cache["v"].dtype), cache["v"])
+    return o.reshape(b, 1, hq, hd).astype(q.dtype)

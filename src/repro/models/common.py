@@ -1,0 +1,243 @@
+"""Shared model components: params-with-logical-axes, norms, RoPE, MLPs.
+
+Every parameter is created together with a *logical axes* tuple (one entry
+per array dim, e.g. ``("embed", "ffn")``).  The launch layer maps logical
+names to mesh axes (TP / FSDP / EP) — model code never mentions the mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis vocabulary (mapped in repro/parallel/sharding.py):
+#   vocab   - vocabulary dim               -> TP
+#   embed   - d_model dim of weights       -> FSDP
+#   ffn     - MLP hidden dim               -> TP
+#   heads   - query heads                  -> TP
+#   kv      - kv heads                     -> TP (if divisible)
+#   expert  - MoE expert dim               -> TP/EP
+#   lru     - recurrent width              -> TP
+#   qlora/kvlora - MLA latent dims         -> replicated
+#   layers  - scan-stacked layer dim       -> replicated
+
+
+@dataclasses.dataclass
+class ParamsWithAxes:
+    params: Any
+    axes: Any
+
+
+# Registered as a pytree with the (static) logical axes as aux data, so
+# jax.eval_shape over an init function carries the axes out untouched.
+jax.tree_util.register_pytree_node(
+    ParamsWithAxes,
+    lambda pa: ((pa.params,), pa.axes),
+    lambda axes, children: ParamsWithAxes(children[0], axes),
+)
+
+
+def dense_init(key, shape, axes, in_axis=0, dtype=jnp.float32, scale=1.0):
+    """He/LeCun-style init; returns (array, axes)."""
+    fan_in = np.prod([shape[i] for i in np.atleast_1d(in_axis)])
+    std = scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, dtype) * std).astype(dtype), axes
+
+
+def zeros_init(shape, axes, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype), axes
+
+
+def ones_init(shape, axes, dtype=jnp.float32):
+    return jnp.ones(shape, dtype), axes
+
+
+def split_tree(pairs: dict) -> ParamsWithAxes:
+    """{'name': (param, axes) | nested dict} -> ParamsWithAxes."""
+    params, axes = {}, {}
+    for k, v in pairs.items():
+        if isinstance(v, dict):
+            sub = split_tree(v)
+            params[k], axes[k] = sub.params, sub.axes
+        elif isinstance(v, ParamsWithAxes):
+            params[k], axes[k] = v.params, v.axes
+        else:
+            params[k], axes[k] = v
+    return ParamsWithAxes(params, axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps=1e-6, plus_one=False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w) if plus_one else w
+    return (x * scale).astype(dt)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+    return y.astype(dt)
+
+
+def norm_init(d, kind="rmsnorm"):
+    if kind == "rmsnorm":
+        return {"w": ones_init((d,), (None,))}
+    return {"w": ones_init((d,), (None,)), "b": zeros_init((d,), (None,))}
+
+
+def apply_norm(x, p, kind="rmsnorm", plus_one=False):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["w"], plus_one=plus_one)
+    return layernorm(x, p["w"], p["b"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_angles(positions, dim, theta=10_000.0):
+    """positions (...,) -> (..., dim/2) angles."""
+    freqs = 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(x, positions, theta=10_000.0, fraction=1.0):
+    """x: (B, S, H, hd); positions: (B, S).  Rotates the first
+    ``fraction * hd`` dims (partial rotary, stablelm-style)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = rope_angles(positions, rot, theta)           # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1) if rot < hd else yr
+
+
+# ---------------------------------------------------------------------------
+# MLPs (gated silu/gelu and plain)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, act="silu", dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = act in ("silu", "geglu")
+    p = {
+        "w_up": dense_init(k2, (d_model, d_ff), ("embed", "ffn"), 0, dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), ("ffn", "embed"), 0, dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(k1, (d_model, d_ff), ("embed", "ffn"), 0, dtype)
+    return p
+
+
+def mlp_apply(x, p, act="silu"):
+    up = x @ p["w_up"]
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * up
+    else:  # plain gelu MLP (whisper)
+        h = jax.nn.gelu(up)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Token embedding / logits
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab, d_model, dtype=jnp.float32):
+    return dense_init(key, (vocab, d_model), ("vocab", "embed"), 1, dtype)
+
+
+def embed_lookup(tokens, table, scale_by_sqrt_dim=False):
+    x = jnp.take(table, tokens, axis=0)
+    if scale_by_sqrt_dim:
+        x = x * np.sqrt(table.shape[-1]).astype(x.dtype)
+    return x
+
+
+def logits_from_embedding(x, table, softcap=None):
+    out = x @ table.T
+    if softcap is not None:
+        out = jnp.tanh(out / softcap) * softcap
+    return out
+
+
+def cross_entropy(logits, labels, mask=None, z_loss=0.0):
+    """Token-mean cross entropy in f32, optional z-loss regularizer."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    if mask is None:
+        return loss.mean()
+    mask = mask.astype(jnp.float32)
+    return (loss * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def cross_entropy_streamed(x, table, labels, mask=None, softcap=None,
+                           chunk: int = 512):
+    """CE against a tied embedding without materializing (B, S, V) logits.
+
+    Scans the sequence in chunks; each chunk's logits are vocab-sharded and
+    reduced to (B, chunk) statistics before the next chunk streams in.  At
+    256k-vocab / 4k-seq / 256-batch the dense logits tensor is ~1 TB — this
+    keeps the live footprint to one chunk.
+    """
+    from repro.parallel.act import shard_spec
+
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+
+    def chunk_loss(xs, ls, ms):
+        logits = xs @ table.T.astype(xs.dtype)
+        if softcap is not None:
+            logits = jnp.tanh(logits / softcap) * softcap
+        logits = shard_spec(logits, d0="data", d2="model")
+        logits = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        loss = (lse - ll) * ms
+        return loss.sum(), ms.sum()
+
+    # recompute chunk logits in the backward pass (vocab-dim flash)
+    chunk_loss_ckpt = jax.checkpoint(chunk_loss)
+
+    def body(carry, i):
+        tot, cnt = carry
+        xs = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, 1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, 1)
+        ms = (jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, 1)
+              .astype(jnp.float32) if mask is not None
+              else jnp.ones((b, chunk), jnp.float32))
+        dl, dc = chunk_loss_ckpt(xs, ls, ms)
+        return (tot + dl, cnt + dc), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(n))
+    if rem:
+        ms = (mask[:, n * chunk:].astype(jnp.float32) if mask is not None
+              else jnp.ones((b, rem), jnp.float32))
+        dl, dc = chunk_loss(x[:, n * chunk:], labels[:, n * chunk:], ms)
+        tot, cnt = tot + dl, cnt + dc
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,101 @@
+"""GQA/MQA attention block: projections + RoPE + (self|cross) attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models.common import apply_rope, dense_init, ones_init, rmsnorm
+
+
+def init_attn(key, cfg, dtype=jnp.float32, cross: bool = False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq, hd), ("embed", "heads", None), 0, dtype),
+        "wk": dense_init(ks[1], (d, hkv, hd), ("embed", "kv", None), 0, dtype),
+        "wv": dense_init(ks[2], (d, hkv, hd), ("embed", "kv", None), 0, dtype),
+        "wo": dense_init(ks[3], (hq, hd, d), ("heads", None, "embed"),
+                         (0, 1), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ones_init((hd,), (None,))
+        p["k_norm"] = ones_init((hd,), (None,))
+    return p
+
+
+def _project_qkv(x, p, cfg, positions, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"].astype(jnp.float32))
+        k = rmsnorm(k, p["k_norm"].astype(jnp.float32))
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return q, k, v
+
+
+def attn_forward(x, p, cfg, *, window: Optional[int] = None, causal=True,
+                 q_offset: int = 0, rope: bool = True, make_cache=False,
+                 cache_len: Optional[int] = None):
+    """Full-sequence attention (train/prefill).
+
+    Returns (out, cache|None); cache covers positions [0, S).
+    """
+    b, s, _ = x.shape
+    positions = q_offset + jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(x, p, cfg, positions, rope)
+    o = attn_lib.attention(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, softcap=None)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    cache = None
+    if make_cache:
+        length = cache_len or s
+        cache = attn_lib.init_cache(b, length, cfg.n_kv_heads, cfg.head_dim,
+                                    dtype=x.dtype)
+        if length >= s:
+            cache = attn_lib.cache_prefill(cache, k, v, 0)
+        else:  # ring cache shorter than the prefill (sliding window)
+            cache = attn_lib.cache_prefill(cache, k[:, -length:],
+                                           v[:, -length:], 0)
+            cache["pos"] = jnp.broadcast_to(
+                jnp.arange(s - length, s, dtype=jnp.int32)[None, :],
+                (b, length))
+    return out, cache
+
+
+def attn_decode(x, p, cfg, cache, index, *, window: Optional[int] = None,
+                rope: bool = True):
+    """One-token decode step. x: (B, 1, d); index: absolute position."""
+    positions = jnp.full((x.shape[0], 1), index, jnp.int32)
+    q, k, v = _project_qkv(x, p, cfg, positions, rope)
+    cache = attn_lib.cache_append(cache, k, v, index)
+    o = attn_lib.decode_attention(q, cache, index, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, cache
+
+
+# --- cross attention (whisper decoder) -------------------------------------
+def init_cross_attn(key, cfg, dtype=jnp.float32):
+    return init_attn(key, cfg, dtype)
+
+
+def cross_attn_forward(x, enc_kv, p, cfg):
+    """x: (B, S, d); enc_kv: precomputed (k, v) from encoder output."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k, v = enc_kv
+    o = attn_lib.attention(q, k.astype(x.dtype), v.astype(x.dtype),
+                           causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def encode_kv(enc_out, p, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v

@@ -1,0 +1,131 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with absorbed decode.
+
+Training/prefill computes standard multi-head attention over decompressed
+keys/values; the cache stores only the latent ``c_kv`` (kv_lora dims) plus
+the shared rotary key — the MLA memory win (512+64 vs 2*128*128 per token).
+
+Decode uses the *absorption* identities: W_uk folds into the query
+(q' = q @ W_uk^T) and W_uv folds into the output projection, so per-step
+attention runs directly against the latent cache with no decompression.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_lib
+from repro.models.common import apply_rope, dense_init, norm_init, apply_norm
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.nope_dim + m.rope_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (d, m.q_lora), ("embed", "qlora"), 0, dtype),
+        "q_norm": norm_init(m.q_lora),
+        "w_uq": dense_init(ks[1], (m.q_lora, h, qk_dim),
+                           ("qlora", "heads", None), 0, dtype),
+        "w_dkv": dense_init(ks[2], (d, m.kv_lora + m.rope_dim),
+                            ("embed", "kvlora"), 0, dtype),
+        "kv_norm": norm_init(m.kv_lora),
+        "w_uk": dense_init(ks[3], (m.kv_lora, h, m.nope_dim),
+                           ("kvlora", "heads", None), 0, dtype),
+        "w_uv": dense_init(ks[4], (m.kv_lora, h, m.v_dim),
+                           ("kvlora", "heads", None), 0, dtype),
+        "wo": dense_init(ks[5], (h, m.v_dim, d), ("heads", None, "embed"),
+                         (0, 1), dtype),
+    }
+
+
+def _latents(x, p, cfg, positions):
+    """Shared path: query heads + latent kv + rotary shared key."""
+    m = cfg.mla
+    cq = apply_norm(x @ p["w_dq"].astype(x.dtype), p["q_norm"])
+    q = jnp.einsum("bsl,lhk->bshk", cq, p["w_uq"].astype(x.dtype))
+    q_nope, q_rope = q[..., : m.nope_dim], q[..., m.nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"].astype(x.dtype)
+    c_kv = apply_norm(dkv[..., : m.kv_lora], p["kv_norm"])
+    k_rope = dkv[..., m.kv_lora:][:, :, None, :]          # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(x, p, cfg, *, q_offset: int = 0, make_cache=False,
+                cache_len=None):
+    """Train/prefill MLA. Returns (out, cache|None)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    positions = q_offset + jnp.arange(s)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _latents(x, p, cfg, positions)
+
+    k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsl,lhk->bshk", c_kv, p["w_uv"].astype(x.dtype))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (b, s, h, m.rope_dim))],
+                        axis=-1)
+    o = attn_lib.attention(q, k, v, causal=True, q_offset=q_offset)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+    cache = None
+    if make_cache:
+        length = cache_len or s
+        cache = {
+            "c_kv": jnp.zeros((b, length, m.kv_lora), x.dtype),
+            "k_rope": jnp.zeros((b, length, m.rope_dim), x.dtype),
+            "pos": jnp.full((b, length), -1, jnp.int32),
+        }
+        cache["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(x.dtype), 0, 1)
+        cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[:, :, 0, :].astype(x.dtype), 0, 1)
+        cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"],
+            jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s)),
+            0, 1)
+    return out, cache
+
+
+def mla_decode(x, p, cfg, cache, index):
+    """Absorbed one-token decode against the latent cache."""
+    m = cfg.mla
+    b = x.shape[0]
+    positions = jnp.full((b, 1), index, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _latents(x, p, cfg, positions)
+
+    # append to latent cache
+    slot = index % cache["c_kv"].shape[1]
+    cache = dict(cache)
+    cache["c_kv"] = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, slot, 0))
+    cache["k_rope"] = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new[:, :, 0, :].astype(cache["k_rope"].dtype),
+        (0, slot, 0))
+    cache["pos"] = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.full((b, 1), index, jnp.int32), (0, slot))
+
+    # absorb W_uk into q: score_nope = (q_nope @ W_uk^T) . c_kv
+    # (f32 accumulation: the absorbed product order amplifies bf16 rounding)
+    q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, p["w_uk"].astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+    scale = 1.0 / np.sqrt(m.nope_dim + m.rope_dim)
+    s_nope = jnp.einsum("bshl,btl->bhst", q_lat, cache["c_kv"],
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, cache["k_rope"],
+                        preferred_element_type=jnp.float32)
+    s = (s_nope + s_rope) * scale
+    valid = (cache["pos"] >= 0) & (cache["pos"] <= index)
+    s = jnp.where(valid[:, None, None, :], s, attn_lib.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    # attend in latent space, then absorb W_uv into the output projection
+    o_lat = jnp.einsum("bhst,btl->bshl", pr, cache["c_kv"])     # (B,1,H,lora)
+    o = jnp.einsum("bshl,lhk->bshk", o_lat, p["w_uv"].astype(x.dtype))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, cache

@@ -1,0 +1,185 @@
+"""Mixture-of-Experts with capacity-based top-k routing + expert parallelism.
+
+Routing follows the standard capacity discipline (tokens beyond an expert's
+capacity are dropped); dispatch is *sort-based* — assignments are sorted by
+expert id, positions within an expert come from a searchsorted trick, and
+activations are gathered only for assignments that actually landed, so no
+(tokens x experts) one-hot tensor ever exists.
+
+Distribution: the block runs under ``shard_map`` with tokens sharded over
+the data axes (replicated over 'model') and experts sharded over 'model'
+(EP).  Each model shard dispatches to its local experts and the shards'
+partial outputs are combined with one psum — the same collective a tensor-
+parallel dense FFN needs, so EP comes at no extra communication cost.
+FSDP-sharded expert weights are all-gathered per layer inside the block.
+
+On a trivial mesh (or ``mesh=None``) the same math runs locally, which is
+what the CPU smoke tests exercise.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import dense_init
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, m.n_experts), ("embed", "expert"),
+                             0, jnp.float32),
+        "w_gate": dense_init(ks[1], (m.n_experts, d, m.d_expert),
+                             ("expert", "embed", None), 1, dtype),
+        "w_up": dense_init(ks[2], (m.n_experts, d, m.d_expert),
+                           ("expert", "embed", None), 1, dtype),
+        "w_down": dense_init(ks[3], (m.n_experts, m.d_expert, d),
+                             ("expert", None, "embed"), 1, dtype),
+    }
+    if m.n_shared:
+        dsh = m.d_expert * m.n_shared
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(kk[0], (d, dsh), ("embed", "ffn"), 0, dtype),
+            "w_up": dense_init(kk[1], (d, dsh), ("embed", "ffn"), 0, dtype),
+            "w_down": dense_init(kk[2], (dsh, d), ("ffn", "embed"), 0, dtype),
+        }
+    return p
+
+
+def _route(x, router_w, m):
+    """Top-k routing: returns (expert_idx, gate) each (T, k) + aux losses."""
+    logits = (x.astype(jnp.float32) @ router_w)            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, m.top_k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux (Switch-style) and router z-loss
+    me = probs.mean(0)                                      # (E,)
+    ce = jnp.zeros_like(me).at[idx.reshape(-1)].add(
+        jnp.ones_like(gate).reshape(-1)) / (idx.size)
+    aux = m.n_experts * jnp.sum(me * ce) * m.aux_loss
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, -1) ** 2) * m.router_z_loss
+    return idx, gate, aux + z
+
+
+def _expert_ffn(buf, w_gate, w_up, w_down):
+    """buf: (E_l, C, d) -> (E_l, C, d) through each expert's gated MLP."""
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(buf.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, w_down.astype(buf.dtype))
+
+
+def _dispatch_compute(x, idx, gate, w_gate, w_up, w_down, e_lo, n_local,
+                      capacity):
+    """Sort-based dispatch for experts [e_lo, e_lo + n_local).
+
+    x: (T, d); idx/gate: (T, k).  Returns (T, d) partial output containing
+    only the local experts' contributions.
+    """
+    t, d = x.shape
+    k = idx.shape[1]
+    e_flat = idx.reshape(-1)
+    g_flat = gate.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(t), k)
+
+    local = (e_flat >= e_lo) & (e_flat < e_lo + n_local)
+    e_loc = jnp.where(local, e_flat - e_lo, n_local)       # non-local -> sentinel
+    order = jnp.argsort(e_loc)                              # locals first, by expert
+    n_slots = n_local * capacity
+    n_gather = min(n_slots, t * k)                          # static
+    order = order[:n_gather]
+    e_sorted = e_loc[order]
+    pos = jnp.arange(n_gather) - jnp.searchsorted(e_sorted, e_sorted,
+                                                  side="left")
+    keep = (e_sorted < n_local) & (pos < capacity)
+    slot = jnp.where(keep, e_sorted * capacity + pos, n_slots)  # OOB drops
+
+    gathered = jnp.take(x, tok_flat[order], axis=0)         # (n_gather, d)
+    buf = jnp.zeros((n_slots + 1, d), x.dtype).at[slot].set(gathered)
+    buf = buf[:n_slots].reshape(n_local, capacity, d)
+
+    out_buf = _expert_ffn(buf, w_gate, w_up, w_down)        # (E_l, C, d)
+    out_flat = out_buf.reshape(n_slots, d)
+    contrib = jnp.take(out_flat, jnp.minimum(slot, n_slots - 1), axis=0)
+    contrib = contrib * (keep * g_flat[order]).astype(x.dtype)[:, None]
+    return jnp.zeros((t, d), x.dtype).at[tok_flat[order]].add(contrib)
+
+
+def moe_forward(x, p, cfg, mesh=None, data_axes=("data",), model_axis="model",
+                fsdp_gather: bool = True):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    When ``mesh`` spans real data/model axes the block runs under shard_map
+    (EP); otherwise it executes the same math locally.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+
+    use_shmap = mesh is not None and (
+        int(np.prod([mesh.shape[a] for a in data_axes])) > 1
+        or mesh.shape[model_axis] > 1)
+
+    if not use_shmap:
+        idx, gate, aux = _route(xt, p["router"], m)
+        cap = int(np.ceil(xt.shape[0] * m.top_k * m.capacity_factor
+                          / m.n_experts))
+        y = _dispatch_compute(xt, idx, gate, p["w_gate"], p["w_up"],
+                              p["w_down"], 0, m.n_experts, max(cap, 1))
+    else:
+        n_model = mesh.shape[model_axis]
+        n_data = int(np.prod([mesh.shape[a] for a in data_axes]))
+        assert m.n_experts % n_model == 0, (m.n_experts, n_model)
+        n_local = m.n_experts // n_model
+        t_local = xt.shape[0] // n_data
+        cap = int(np.ceil(t_local * m.top_k * m.capacity_factor
+                          / m.n_experts))
+        cap = max(cap, 4)
+
+        def local_fn(x_l, router_w, w_gate, w_up, w_down):
+            # x_l: (T_l, d) — sharded over data, replicated over model.
+            if fsdp_gather:
+                # FSDP: expert weights arrive sharded on d_model; gather.
+                w_gate_f = jax.lax.all_gather(w_gate, data_axes, axis=1,
+                                              tiled=True)
+                w_up_f = jax.lax.all_gather(w_up, data_axes, axis=1,
+                                            tiled=True)
+                w_down_f = jax.lax.all_gather(w_down, data_axes, axis=2,
+                                              tiled=True)
+            else:
+                w_gate_f, w_up_f, w_down_f = w_gate, w_up, w_down
+            idx, gate, aux_l = _route(x_l, router_w, m)
+            e_lo = jax.lax.axis_index(model_axis) * n_local
+            y_l = _dispatch_compute(x_l, idx, gate, w_gate_f, w_up_f,
+                                    w_down_f, e_lo, n_local, cap)
+            y_l = jax.lax.psum(y_l, model_axis)
+            aux_l = jax.lax.pmean(aux_l, data_axes)
+            return y_l, aux_l
+
+        dp = P(data_axes if len(data_axes) > 1 else data_axes[0])
+        y, aux = jax.shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(P(dp[0], None), P(None, None),
+                      P(model_axis, dp[0] if fsdp_gather else None, None),
+                      P(model_axis, dp[0] if fsdp_gather else None, None),
+                      P(model_axis, None, dp[0] if fsdp_gather else None)),
+            out_specs=(P(dp[0], None), P()),
+            check_vma=False,
+        )(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+    y = y.reshape(b, s, d)
+    if m.n_shared:
+        sh = p["shared"]
+        g = jax.nn.silu(x @ sh["w_gate"].astype(x.dtype))
+        u = x @ sh["w_up"].astype(x.dtype)
+        y = y + (g * u) @ sh["w_down"].astype(x.dtype)
+    return y, aux

@@ -1,0 +1,110 @@
+"""Frozen-weight int8 specialization for serving — the paper's technique
+applied to LM inference.
+
+The paper's core premise: when a matrix is fixed for the lifetime of the
+computation, specialize its representation offline.  At LM serving time all
+weights are frozen, and decode is memory-roofline-bound (every weight is
+re-read per token), so halving the weight stream halves the dominant
+roofline term.  We quantize every large float leaf to symmetric int8 with a
+per-output-channel f32 scale (the paper's 8-bit signed weights) and
+dequantize *per layer inside the scan body* — the int8 bytes are what HBM
+streams; the bf16 copy lives only in VMEM-scale working set.
+
+Dense LM weights have ~zero element sparsity, so the paper's element/block
+culling lever does not apply here (DESIGN.md §Arch-applicability); the
+digit-plane path stays available for genuinely sparse frozen matrices via
+``repro.kernels.bitplane_gemv``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MIN_QUANT_SIZE = 1 << 16  # don't quantize norms/biases/small tables
+
+__all__ = ["quantize_tree", "dequant_tree", "is_quantized_leaf",
+           "quant_struct_like"]
+
+
+def _should_quantize(x) -> bool:
+    dt = getattr(x, "dtype", None)
+    shape = getattr(x, "shape", ())
+    if dt is None or not jnp.issubdtype(dt, jnp.floating):
+        return False
+    if int(np.prod(shape)) < MIN_QUANT_SIZE:
+        return False
+    # >=3D: a true matrix (possibly layer-stacked).  2D: require both dims
+    # large — excludes layer-stacked norm/bias vectors like (layers, d).
+    return len(shape) >= 3 or (len(shape) == 2 and min(shape) >= 1024)
+
+
+def is_quantized_leaf(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def quantize_tree(params: Any) -> Any:
+    """Replace big float leaves with {"q": int8, "scale": f32[last_dim]}."""
+
+    def one(x):
+        if not _should_quantize(x):
+            return x
+        w = jnp.asarray(x, jnp.float32)
+        # scale over (leading stack dim if any, out channels): layer-stacked
+        # weights keep their layer dim so lax.scan can slice per layer.
+        red = tuple(range(1, w.ndim - 1)) if w.ndim >= 3 else (0,)
+        amax = jnp.max(jnp.abs(w), axis=red, keepdims=True)
+        scale = jnp.maximum(amax / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": jnp.squeeze(scale, red).astype(jnp.float32)}
+
+    return jax.tree.map(one, params)
+
+
+def dequant_tree(params: Any, dtype=jnp.bfloat16) -> Any:
+    """Inverse of quantize_tree (no-op on unquantized leaves)."""
+
+    def one(x):
+        if is_quantized_leaf(x):
+            q, scale = x["q"], x["scale"]
+            if scale.ndim == 2:    # (layers, out) — outside the layer scan
+                shape = (scale.shape[0],) + (1,) * (q.ndim - 2) + (scale.shape[1],)
+            else:                  # (out,) — plain or scan-sliced weight
+                shape = (1,) * (q.ndim - 1) + (scale.shape[0],)
+            return q.astype(dtype) * scale.reshape(shape).astype(dtype)
+        return x
+
+    return jax.tree.map(one, params, is_leaf=is_quantized_leaf)
+
+
+def quant_struct_like(struct: Any) -> Any:
+    """ShapeDtypeStruct tree -> the quantized-serving struct tree.
+
+    ``q`` inherits the original sharding; ``scale`` (out-channel vector)
+    takes the last axis' spec.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def one(sds):
+        if not _should_quantize(sds):
+            return sds
+        sh = getattr(sds, "sharding", None)
+        q_sh = sh
+        s_sh = None
+        sc_shape = ((sds.shape[0], sds.shape[-1]) if len(sds.shape) >= 3
+                    else (sds.shape[-1],))
+        if sh is not None and hasattr(sh, "spec"):
+            spec = list(sh.spec) + [None] * (len(sds.shape) - len(sh.spec))
+            s_spec = ((spec[0], spec[-1]) if len(sds.shape) >= 3
+                      else (spec[-1],))
+            s_sh = NamedSharding(sh.mesh, P(*s_spec))
+        return {
+            "q": jax.ShapeDtypeStruct(sds.shape, jnp.int8, sharding=q_sh),
+            "scale": jax.ShapeDtypeStruct(sc_shape, jnp.float32,
+                                          sharding=s_sh),
+        }
+
+    return jax.tree.map(one, struct)

@@ -1,0 +1,125 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    r_t = sigmoid(x_t W_a + b_a)            recurrence gate
+    i_t = sigmoid(x_t W_x + b_x)            input gate
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence (the
+recurrence is linear in h, so it parallelizes in O(log S) depth) — this is
+what makes the 524288-token cell tractable.  Decode keeps O(1) state:
+(conv buffer, h).
+
+Block layout (Griffin): y = W_out[ GeLU(x W_gate) * RGLRU(conv4(x W_in)) ].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, zeros_init
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, dtype=jnp.float32):
+    d, r = cfg.d_model, cfg.lru_dim
+    w = cfg.conv_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so softplus(Lambda) spreads decay rates (Griffin: a in
+    # [0.9, 0.999] at r=1): sample uniform then invert.
+    u = jax.random.uniform(ks[0], (r,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(a)/c)
+    return {
+        "w_in": dense_init(ks[1], (d, r), ("embed", "lru"), 0, dtype),
+        "w_gate": dense_init(ks[2], (d, r), ("embed", "lru"), 0, dtype),
+        "w_out": dense_init(ks[3], (r, d), ("lru", "embed"), 0, dtype),
+        "conv_w": dense_init(ks[4], (w, r), (None, "lru"), 0, dtype, scale=0.5),
+        "conv_b": zeros_init((r,), ("lru",), dtype),
+        "w_a": dense_init(ks[5], (r, r), ("lru", None), 0, dtype),
+        "b_a": zeros_init((r,), (None,), dtype),
+        "w_x": dense_init(jax.random.fold_in(key, 7), (r, r), ("lru", None),
+                          0, dtype),
+        "b_x": zeros_init((r,), (None,), dtype),
+        "lam": (lam.astype(jnp.float32), ("lru",)),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv, width W.  x: (B, S, r); state: (B, W-1, r)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(width))
+    new_state = xp[:, -(width - 1):, :] if width > 1 else pad
+    return out + b.astype(x.dtype), new_state
+
+
+def _gates(xc, p):
+    r = jax.nn.sigmoid(xc @ p["w_a"].astype(xc.dtype) + p["b_a"].astype(xc.dtype))
+    i = jax.nn.sigmoid(xc @ p["w_x"].astype(xc.dtype) + p["b_x"].astype(xc.dtype))
+    log_a = (-_C * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated_in = (i.astype(jnp.float32) * xc.astype(jnp.float32)
+                * jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)))
+    return a, gated_in
+
+
+def rglru_scan(xc, p, h0=None):
+    """Linear recurrence over the whole sequence via associative scan.
+
+    xc: (B, S, r) conv output; returns (h (B, S, r) f32, h_last).
+    """
+    a, b = _gates(xc, p)                 # both (B, S, r) f32
+    if h0 is not None:
+        # fold the carried state in as a virtual step contribution
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]
+
+
+def rglru_block_forward(x, p, cfg, state=None):
+    """Full-sequence Griffin recurrent block.
+
+    state: None or dict(conv (B, W-1, r), h (B, r)).
+    Returns (y (B, S, d), new_state).
+    """
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+    xin = x @ p["w_in"].astype(x.dtype)
+    conv_state = state["conv"] if state else None
+    xc, conv_new = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    h0 = state["h"] if state else None
+    h, h_last = rglru_scan(xc, p, h0)
+    y = (gate * h.astype(x.dtype)) @ p["w_out"].astype(x.dtype)
+    new_state = {"conv": conv_new, "h": h_last}
+    return y, new_state
+
+
+def rglru_block_decode(x, p, cfg, state):
+    """One-token step. x: (B, 1, d); state from forward/init_state."""
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+    xin = x @ p["w_in"].astype(x.dtype)
+    xc, conv_new = _causal_conv(xin, p["conv_w"], p["conv_b"], state["conv"])
+    a, b = _gates(xc, p)                                   # (B, 1, r)
+    h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+    y = (gate * h[:, None, :].astype(x.dtype)) @ p["w_out"].astype(x.dtype)
+    return y, {"conv": conv_new, "h": h}
+
+
+def init_state(batch, cfg, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_dim), dtype),
+        "h": jnp.zeros((batch, cfg.lru_dim), jnp.float32),
+    }

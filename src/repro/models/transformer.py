@@ -1,0 +1,526 @@
+"""Model assembly: block dispatch, scan-over-groups stacking, LM API.
+
+A config's ``block_pattern`` (e.g. ``("rglru", "rglru", "local")``) defines
+one *group*; the depth is ``n_groups`` repetitions (plus an optional tail).
+Groups are homogeneous, so the layer stack is a single ``lax.scan`` over
+stacked parameters — one compiled group body regardless of depth, which is
+what keeps 512-device dry-run compiles tractable.
+
+Block types:
+  attn   - global causal attention + MLP (or MoE)
+  local  - sliding-window attention + MLP
+  mla    - DeepSeek-V2 latent attention + MoE
+  rglru  - Griffin recurrent block + MLP
+  mlstm  - xLSTM matrix-memory block (no separate MLP when d_ff == 0)
+  slstm  - xLSTM scalar-memory block
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import gqa, mla as mla_lib, moe as moe_lib
+from repro.models import rglru as rglru_lib, xlstm as xlstm_lib
+from repro.models import attention as attn_lib
+from repro.models.common import (ParamsWithAxes, apply_norm, cross_entropy,
+                                 cross_entropy_streamed, dense_init,
+                                 embed_init, embed_lookup,
+                                 logits_from_embedding, mlp_init, mlp_apply,
+                                 norm_init, split_tree)
+from repro.models.quantize import dequant_tree
+from repro.parallel.act import shard_batch
+
+
+@dataclasses.dataclass
+class ParallelCtx:
+    mesh: Any = None
+    data_axes: tuple = ("data",)
+    model_axis: str = "model"
+    fsdp: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Single block init / forward / decode
+# ---------------------------------------------------------------------------
+def _init_block(key, cfg: ModelConfig, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    p: dict = {"norm1": norm_init(cfg.d_model, cfg.norm)}
+    if kind in ("attn", "local"):
+        p["attn"] = gqa.init_attn(ks[0], cfg, dtype)
+    elif kind == "mla":
+        p["attn"] = mla_lib.init_mla(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["mixer"] = rglru_lib.init_rglru(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mixer"] = xlstm_lib.init_mlstm(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["mixer"] = xlstm_lib.init_slstm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    has_ffn = cfg.d_ff > 0 or cfg.moe is not None
+    if has_ffn and kind not in ("mlstm", "slstm"):
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm)
+        if cfg.moe is not None:
+            p["moe"] = moe_lib.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act,
+                                dtype)
+    return p
+
+
+def _slstm_sharded(h, mixer, cfg: ModelConfig, ctx: ParallelCtx):
+    """sLSTM under shard_map (batch over the data axes).
+
+    GSPMD places the recurrent-weight gradient psum *inside* the 4096-step
+    time loop otherwise (one (H, hd, hd) all-reduce per step per direction —
+    measured 8.3e11 B/device/step on xlstm train_4k).  Under shard_map the
+    step math is local and the transpose of the replicated weights inserts
+    exactly one psum per block call.  §Perf iteration A3.
+    """
+    if ctx.mesh is None:
+        return xlstm_lib.slstm_forward(h, mixer, cfg)
+    from jax.sharding import PartitionSpec as P
+    dp = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+
+    def local_fn(h_l, mixer_l):
+        out, cache = xlstm_lib.slstm_forward(h_l, mixer_l, cfg)
+        return out, cache
+
+    rep = jax.tree.map(lambda _: P(), mixer)
+    cache_specs = {"c": P(dp), "n": P(dp), "h": P(dp), "m": P(dp)}
+    out, cache = jax.shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(dp, None, None), rep),
+        out_specs=(P(dp, None, None), cache_specs),
+        check_vma=False,
+    )(h, mixer)
+    return out, cache
+
+
+def _block_forward(x, p, cfg: ModelConfig, kind: str, ctx: ParallelCtx,
+                   *, make_cache=False, cache_len=None, q_offset=0):
+    """Full-sequence block. Returns (x, cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(x, p["norm1"], cfg.norm)
+    cache = None
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else None
+        clen = cache_len
+        if kind == "local" and cache_len is not None and cfg.window:
+            clen = min(cache_len, cfg.window)
+        out, cache = gqa.attn_forward(h, p["attn"], cfg, window=window,
+                                      q_offset=q_offset,
+                                      make_cache=make_cache, cache_len=clen)
+    elif kind == "mla":
+        out, cache = mla_lib.mla_forward(h, p["attn"], cfg, q_offset=q_offset,
+                                         make_cache=make_cache,
+                                         cache_len=cache_len)
+    elif kind == "rglru":
+        out, cache = rglru_lib.rglru_block_forward(h, p["mixer"], cfg)
+        if not make_cache:
+            cache = None
+    elif kind == "mlstm":
+        out, cache = xlstm_lib.mlstm_chunk_forward(h, p["mixer"], cfg)
+        if not make_cache:
+            cache = None
+    elif kind == "slstm":
+        out, cache = _slstm_sharded(h, p["mixer"], cfg, ctx)
+        if not make_cache:
+            cache = None
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if "norm2" in p:
+        h = apply_norm(x, p["norm2"], cfg.norm)
+        if "moe" in p:
+            out, aux = moe_lib.moe_forward(h, p["moe"], cfg, ctx.mesh,
+                                           ctx.data_axes, ctx.model_axis,
+                                           fsdp_gather=ctx.fsdp)
+        else:
+            out = mlp_apply(h, p["mlp"], cfg.mlp_act)
+        x = x + out
+    return x, cache, aux
+
+
+def _block_decode(x, p, cfg: ModelConfig, kind: str, ctx: ParallelCtx,
+                  cache, index):
+    """One-token block step. Returns (x, cache)."""
+    h = apply_norm(x, p["norm1"], cfg.norm)
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else None
+        out, cache = gqa.attn_decode(h, p["attn"], cfg, cache, index,
+                                     window=window)
+    elif kind == "mla":
+        out, cache = mla_lib.mla_decode(h, p["attn"], cfg, cache, index)
+    elif kind == "rglru":
+        out, cache = rglru_lib.rglru_block_decode(h, p["mixer"], cfg, cache)
+    elif kind == "mlstm":
+        out, cache = xlstm_lib.mlstm_decode(h, p["mixer"], cfg, cache)
+    elif kind == "slstm":
+        out, cache = xlstm_lib.slstm_decode(h, p["mixer"], cfg, cache)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if "norm2" in p:
+        h = apply_norm(x, p["norm2"], cfg.norm)
+        if "moe" in p:
+            out, _ = moe_lib.moe_forward(h, p["moe"], cfg, ctx.mesh,
+                                         ctx.data_axes, ctx.model_axis,
+                                         fsdp_gather=ctx.fsdp)
+        else:
+            out = mlp_apply(h, p["mlp"], cfg.mlp_act)
+        x = x + out
+    return x, cache
+
+
+def _init_cache_for(cfg: ModelConfig, kind: str, batch, cache_len, dtype):
+    if kind == "attn":
+        return attn_lib.init_cache(batch, cache_len, cfg.n_kv_heads,
+                                   cfg.head_dim, dtype)
+    if kind == "local":
+        length = min(cache_len, cfg.window) if cfg.window else cache_len
+        return attn_lib.init_cache(batch, length, cfg.n_kv_heads,
+                                   cfg.head_dim, dtype)
+    if kind == "mla":
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros((batch, cache_len, m.kv_lora), dtype),
+            "k_rope": jnp.zeros((batch, cache_len, m.rope_dim), dtype),
+            "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+        }
+    if kind == "rglru":
+        return rglru_lib.init_state(batch, cfg, dtype)
+    if kind == "mlstm":
+        return xlstm_lib.init_mlstm_state(batch, cfg)
+    if kind == "slstm":
+        return xlstm_lib.init_slstm_state(batch, cfg)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Group stacking (lax.scan over groups)
+# ---------------------------------------------------------------------------
+def _init_group(key, cfg: ModelConfig, dtype, with_cross: bool = False):
+    ks = jax.random.split(key, len(cfg.block_pattern) + 2)
+    g = {f"b{i}": _init_block(ks[i], cfg, kind, dtype)
+         for i, kind in enumerate(cfg.block_pattern)}
+    if with_cross:  # enc-dec: one cross-attention per group
+        g["xnorm"] = norm_init(cfg.d_model, cfg.norm)
+        g["xattn"] = gqa.init_cross_attn(ks[-1], cfg, dtype)
+    return g
+
+
+def _group_forward(x, gp, cfg, ctx, *, make_cache, cache_len, q_offset):
+    caches, aux = {}, jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.block_pattern):
+        x, cache, a = _block_forward(x, gp[f"b{i}"], cfg, kind, ctx,
+                                     make_cache=make_cache,
+                                     cache_len=cache_len, q_offset=q_offset)
+        if make_cache:
+            caches[f"b{i}"] = cache
+        aux = aux + a
+    return x, caches, aux
+
+
+def _group_decode(x, gp, cfg, ctx, caches, index):
+    new = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        x, new[f"b{i}"] = _block_decode(x, gp[f"b{i}"], cfg, kind, ctx,
+                                        caches[f"b{i}"], index)
+    return x, new
+
+
+def _stack_params(trees):
+    """List of identical pytrees -> single pytree with leading layer dim."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# LM: the end-to-end decoder-only model (plus enc-dec variant)
+# ---------------------------------------------------------------------------
+class LM:
+    """Functional language model for one ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> ParamsWithAxes:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.n_groups + 8)
+        cross = cfg.encoder is not None
+        groups = [_init_group(keys[i], cfg, self.dtype, with_cross=cross)
+                  for i in range(cfg.n_groups)]
+        tree = {
+            "embed": embed_init(keys[-1], cfg.vocab_size, cfg.d_model,
+                                self.dtype),
+            "final_norm": norm_init(cfg.d_model, cfg.norm),
+        }
+        pax = [split_tree(g) for g in groups]
+        stacked = ParamsWithAxes(
+            _stack_params([p.params for p in pax]),
+            jax.tree.map(lambda a: ("layers",) + a, pax[0].axes,
+                         is_leaf=lambda a: isinstance(a, tuple)))
+        tree["groups"] = stacked
+        if cfg.tail_pattern:
+            tail_cfg = cfg.replace(block_pattern=cfg.tail_pattern)
+            tree["tail"] = split_tree(_init_group(keys[-2], tail_cfg,
+                                                  self.dtype))
+        if not cfg.tie_embeddings:
+            tree["lm_head"] = dense_init(keys[-3],
+                                         (cfg.d_model, cfg.vocab_size),
+                                         ("embed", "vocab"), 0, self.dtype)
+        if cfg.encoder is not None:
+            tree["encoder"] = self._init_encoder(keys[-4])
+        return split_tree(tree)
+
+    def _init_encoder(self, key):
+        cfg = self.cfg
+        enc = cfg.replace(block_pattern=("attn",) * cfg.encoder.n_layers)
+        ks = jax.random.split(key, cfg.encoder.n_layers + 2)
+        blocks = [_init_block(ks[i], cfg, "attn", self.dtype)
+                  for i in range(cfg.encoder.n_layers)]
+        pax = [split_tree(b) for b in blocks]
+        return {
+            "blocks": ParamsWithAxes(
+                _stack_params([p.params for p in pax]),
+                jax.tree.map(lambda a: ("layers",) + a, pax[0].axes,
+                             is_leaf=lambda a: isinstance(a, tuple))),
+            "pos_embed": dense_init(ks[-1], (cfg.encoder.seq_len, cfg.d_model),
+                                    (None, "embed"), 0, self.dtype),
+            "final_norm": norm_init(cfg.d_model, cfg.norm),
+        }
+
+    # -- shared forward over the stack ---------------------------------------
+    def _backbone(self, params, x, ctx, *, make_cache=False, cache_len=None,
+                  q_offset=0):
+        cfg = self.cfg
+
+        def group_fn(x, gp):
+            x = shard_batch(x)  # anchor the layer-scan carry
+            gp = dequant_tree(gp, self.dtype)  # int8 serving: HBM streams
+            return _group_forward(x, gp, cfg, ctx, make_cache=make_cache,
+                                  cache_len=cache_len, q_offset=q_offset)
+
+        body = _remat(group_fn, cfg.remat)
+
+        if cfg.scan_layers:
+            def scan_body(carry, gp):
+                x, aux = carry
+                x, caches, a = body(x, gp)
+                return (x, aux + a), caches
+            (x, aux), caches = jax.lax.scan(
+                scan_body, (x, jnp.zeros((), jnp.float32)), params["groups"])
+        else:
+            caches_list, aux = [], jnp.zeros((), jnp.float32)
+            for i in range(cfg.n_groups):
+                gp = jax.tree.map(lambda a: a[i], params["groups"])
+                x, c, a = body(x, gp)
+                caches_list.append(c)
+                aux = aux + a
+            caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *caches_list)
+                      if make_cache else None)
+
+        tail_caches = None
+        if cfg.tail_pattern:
+            tail_cfg = cfg.replace(block_pattern=cfg.tail_pattern)
+            x, tail_caches, a = _group_forward(
+                x, params["tail"], tail_cfg, ctx, make_cache=make_cache,
+                cache_len=cache_len, q_offset=q_offset)
+            aux = aux + a
+        return x, (caches, tail_caches), aux
+
+    def _encode(self, params, frames, ctx):
+        """Encoder stack over stub frame/patch embeddings (B, T, d)."""
+        cfg = self.cfg
+        x = frames.astype(self.dtype) + params["encoder"]["pos_embed"][
+            : frames.shape[1]].astype(self.dtype)
+
+        def block_fn(x, bp):
+            h = apply_norm(x, bp["norm1"], cfg.norm)
+            out, _ = gqa.attn_forward(h, bp["attn"], cfg, causal=False,
+                                      rope=False)
+            x = x + out
+            h = apply_norm(x, bp["norm2"], cfg.norm)
+            return x + mlp_apply(h, bp["mlp"], cfg.mlp_act), None
+
+        x, _ = jax.lax.scan(lambda c, bp: block_fn(c, bp), x,
+                            params["encoder"]["blocks"])
+        return apply_norm(x, params["encoder"]["final_norm"], cfg.norm)
+
+    # -- embeddings / logits --------------------------------------------------
+    def _embed(self, params, tokens, extra_embeds=None):
+        cfg = self.cfg
+        scale = cfg.name.startswith(("gemma", "recurrentgemma"))
+        table = dequant_tree(params["embed"], self.dtype)
+        x = embed_lookup(tokens, table, scale_by_sqrt_dim=scale)
+        if extra_embeds is not None:
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        return shard_batch(x)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        if self.cfg.tie_embeddings:
+            return logits_from_embedding(
+                x, dequant_tree(params["embed"], x.dtype), cfg.logit_softcap)
+        out = x @ dequant_tree(params["lm_head"], x.dtype).astype(x.dtype)
+        if cfg.logit_softcap:
+            out = jnp.tanh(out / cfg.logit_softcap) * cfg.logit_softcap
+        return out
+
+    # -- training loss --------------------------------------------------------
+    def loss(self, params, batch, ctx: Optional[ParallelCtx] = None):
+        """batch: tokens (B, S+1) int32 [+ frames/patches for enc-dec/vlm]."""
+        ctx = ctx or ParallelCtx()
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inp, labels = tokens[:, :-1], tokens[:, 1:]
+        extra = batch.get("patches") if cfg.frontend == "vision" else None
+        x = self._embed(params, inp, extra)
+        if cfg.encoder is not None:
+            enc = self._encode(params, batch["frames"], ctx)
+            x, _, aux = self._encdec_forward(params, x, enc, ctx)
+        else:
+            x, _, aux = self._backbone(params, x, ctx)
+        if extra is not None:
+            x = x[:, extra.shape[1]:]
+        mask = batch.get("mask")
+        x = apply_norm(x, params["final_norm"], cfg.norm)
+        table = (params["embed"] if cfg.tie_embeddings
+                 else params["lm_head"].T)
+        if x.shape[1] * cfg.vocab_size > (1 << 24):
+            # stream the vocab projection: never materialize (B, S, V)
+            loss = cross_entropy_streamed(x, table, labels, mask,
+                                          softcap=cfg.logit_softcap)
+        else:
+            logits = logits_from_embedding(x, table, cfg.logit_softcap)
+            loss = cross_entropy(logits, labels, mask)
+        return loss + aux
+
+    # -- enc-dec (whisper) -----------------------------------------------------
+    def _encdec_forward(self, params, x, enc, ctx, *, make_cache=False,
+                        cache_len=None, q_offset=0):
+        """Decoder with one cross-attention after each group's self blocks.
+
+        Returns (x, caches|None, aux).
+        """
+        cfg = self.cfg
+
+        def scan_body(carry, gp):
+            x, aux = carry
+            gp = dequant_tree(gp, self.dtype)
+            x, caches, a = _group_forward(x, gp, cfg, ctx,
+                                          make_cache=make_cache,
+                                          cache_len=cache_len,
+                                          q_offset=q_offset)
+            h = apply_norm(x, gp["xnorm"], cfg.norm)
+            enc_kv = gqa.encode_kv(enc, gp["xattn"], cfg)
+            x = x + gqa.cross_attn_forward(h, enc_kv, gp["xattn"], cfg)
+            return (x, aux + a), caches
+
+        (x, aux), caches = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), params["groups"])
+        return x, (caches if make_cache else None), aux
+
+    # -- serving ---------------------------------------------------------------
+    def init_caches(self, batch, cache_len):
+        cfg = self.cfg
+        def one_group(pattern):
+            return {f"b{i}": _init_cache_for(cfg, kind, batch, cache_len,
+                                             self.dtype)
+                    for i, kind in enumerate(pattern)}
+        g = one_group(cfg.block_pattern)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape).copy()
+            if cfg.scan_layers else a, g)
+        tail = one_group(cfg.tail_pattern) if cfg.tail_pattern else None
+        return {"groups": stacked, "tail": tail, "index": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, batch, cache_len, ctx=None):
+        """Forward the prompt, building caches. Returns (last_logits, caches)."""
+        ctx = ctx or ParallelCtx()
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        extra = batch.get("patches") if cfg.frontend == "vision" else None
+        x = self._embed(params, tokens, extra)
+        if cfg.encoder is not None:
+            enc = self._encode(params, batch["frames"], ctx)
+            x, caches, _ = self._encdec_forward(params, x, enc, ctx,
+                                                make_cache=True,
+                                                cache_len=cache_len)
+            logits = self._logits(params, x[:, -1:])
+            return logits, {"groups": caches, "tail": None, "enc": enc,
+                            "index": jnp.array(tokens.shape[1], jnp.int32)}
+        x, (caches, tail_caches), _ = self._backbone(
+            params, x, ctx, make_cache=True, cache_len=cache_len)
+        logits = self._logits(params, x[:, -1:])
+        seq = x.shape[1]
+        return logits, {"groups": caches, "tail": tail_caches,
+                        "index": jnp.array(seq, jnp.int32)}
+
+    def decode_step(self, params, caches, token, ctx=None):
+        """token: (B, 1) int32. Returns (logits (B,1,V), new caches)."""
+        ctx = ctx or ParallelCtx()
+        cfg = self.cfg
+        index = caches["index"]
+        x = self._embed(params, token)
+        enc = caches.get("enc")
+
+        def scan_body(x, inp):
+            gp, cache_g = inp
+            gp = dequant_tree(gp, self.dtype)  # int8 serving path
+            x, new_cache = _group_decode(x, gp, cfg, ctx, cache_g, index)
+            if enc is not None:  # enc-dec: cross-attend after the group
+                h = apply_norm(x, gp["xnorm"], cfg.norm)
+                enc_kv = gqa.encode_kv(enc, gp["xattn"], cfg)
+                x = x + gqa.cross_attn_forward(h, enc_kv, gp["xattn"], cfg)
+            return x, new_cache
+
+        if cfg.scan_layers:
+            x, new_caches = jax.lax.scan(scan_body, x,
+                                         (params["groups"], caches["groups"]))
+        else:
+            new_list = []
+            for i in range(cfg.n_groups):
+                gp = jax.tree.map(lambda a: a[i], params["groups"])
+                cg = jax.tree.map(lambda a: a[i], caches["groups"])
+                x, c = _group_decode(x, gp, cfg, ctx, cg, index)
+                new_list.append(c)
+            new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+
+        tail_caches = caches.get("tail")
+        if cfg.tail_pattern:
+            tail_cfg = cfg.replace(block_pattern=cfg.tail_pattern)
+            x, tail_caches = _group_decode(x, params["tail"], tail_cfg, ctx,
+                                           caches["tail"], index)
+        logits = self._logits(params, x)
+        out = {"groups": new_caches, "tail": tail_caches, "index": index + 1}
+        if enc is not None:
+            out["enc"] = enc
+        return logits, out
+
+    # -- misc -------------------------------------------------------------------
+    def param_count(self, params=None) -> int:
+        if params is None:
+            shapes = jax.eval_shape(lambda k: self.init(k).params,
+                                    jax.random.PRNGKey(0))
+            return sum(int(np.prod(a.shape)) for a in jax.tree.leaves(shapes))
+        return sum(int(np.prod(a.shape)) for a in jax.tree.leaves(params))

@@ -1,0 +1,236 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM recurrence per head (exp gating with max-stabilizer m):
+
+    m_t  = max(f~_t + m_{t-1}, i~_t)
+    f'   = exp(f~_t + m_{t-1} - m_t);  i' = exp(i~_t - m_t)
+    C_t  = f' C_{t-1} + i' k_t v_t^T          (matrix memory, hd x hd)
+    n_t  = f' n_{t-1} + i' k_t
+    h_t  = (q_t^T C_t) / max(|q_t^T n_t|, exp(-m_t))
+
+Training/prefill runs the *chunkwise* form: within a chunk the output is an
+attention-like masked product with gate matrix D, across chunks the (C, n,
+m) state is carried recurrently — O(S * L) work instead of O(S^2).  Decode
+is the plain O(1) step.  sLSTM has recurrent weights on h so it is
+inherently sequential: a lax.scan over time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, norm_init, apply_norm, zeros_init
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], (d, h, hd), ("embed", "heads", None), 0, dtype),
+        "wk": dense_init(ks[1], (d, h, hd), ("embed", "heads", None), 0, dtype),
+        "wv": dense_init(ks[2], (d, h, hd), ("embed", "heads", None), 0, dtype),
+        "w_i": dense_init(ks[3], (d, h), ("embed", "heads"), 0, jnp.float32),
+        "w_f": dense_init(ks[4], (d, h), ("embed", "heads"), 0, jnp.float32),
+        "b_i": zeros_init((h,), ("heads",)),
+        "b_f": (jnp.full((h,), 3.0, jnp.float32), ("heads",)),  # open forget
+        "w_o": dense_init(ks[5], (d, h, hd), ("embed", "heads", None), 0, dtype),
+        "norm": norm_init(h * hd),
+        "w_out": dense_init(ks[6], (h, hd, d), ("heads", None, "embed"),
+                            (0, 1), dtype),
+    }
+
+
+def _mlstm_proj(x, p):
+    hd = p["wq"].shape[-1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype)) / np.sqrt(hd)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype)) / np.sqrt(hd)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    it = (jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_i"])
+          + p["b_i"])
+    ft = (jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_f"])
+          + p["b_f"])
+    ft = -jax.nn.softplus(-ft)           # log sigmoid: log f in (-inf, 0)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", x, p["w_o"].astype(x.dtype)))
+    return q, k, v, it, ft, og
+
+
+def mlstm_chunk_forward(x, p, cfg, state=None, chunk: int = 256):
+    """Chunkwise-parallel mLSTM over a sequence.
+
+    x: (B, S, d) with S % chunk == 0 (or S < chunk: single chunk).
+    state: None or dict(c (B,H,hd,hd), n (B,H,hd), m (B,H)).
+    Returns (y, new_state).
+    """
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    nchunk = s // l
+    q, k, v, it, ft, og = _mlstm_proj(x, p)
+    # reshape into chunks: (B, N, L, H, ...)
+    rs = lambda a: a.reshape((b, nchunk, l) + a.shape[2:])
+    q, k, v, it, ft, og = map(rs, (q, k, v, it, ft, og))
+
+    if state is None:
+        state = init_mlstm_state(b, cfg)
+
+    def chunk_step(carry, inp):
+        c0, n0, m0 = carry                       # (B,H,hd,hd),(B,H,hd),(B,H)
+        qc, kc, vc, ic, fc = inp                 # (B,L,H,*) / (B,L,H)
+        g = jnp.cumsum(fc, axis=1)               # (B,L,H) cumulative log f
+        # stabilizers: intra source term a_s = i~_s - g_s ; inter term m0
+        a = ic - g                               # (B,L,H)
+        a_run = jax.lax.cummax(a, axis=1)        # running max over s<=t
+        m_t = jnp.maximum(g + m0[:, None, :], g + a_run)   # (B,L,H)
+        # inter-chunk: exp(g_t + m0 - m_t) * (q C0, q n0)
+        inter_w = jnp.exp(g + m0[:, None, :] - m_t)        # (B,L,H)
+        q32 = qc.astype(jnp.float32)
+        inter_h = jnp.einsum("blhk,bhkj->blhj", q32, c0) * inter_w[..., None]
+        inter_n = jnp.einsum("blhk,bhk->blh", q32, n0) * inter_w
+        # intra-chunk masked gate matrix D[t,s] = exp(g_t - g_s + i_s - m_t)
+        logd = (g[:, :, None, :] - g[:, None, :, :]
+                + ic[:, None, :, :] - m_t[:, :, None, :])  # (B,L,L,H) t,s
+        mask = jnp.tril(jnp.ones((l, l), bool))
+        logd = jnp.where(mask[None, :, :, None], logd, NEG)
+        dmat = jnp.exp(logd)
+        scores = jnp.einsum("bthk,bshk->btsh", q32, kc.astype(jnp.float32))
+        w = scores * dmat
+        intra_h = jnp.einsum("btsh,bshj->bthj", w, vc.astype(jnp.float32))
+        intra_n = w.sum(axis=2)                            # (B,L,H)
+        denom = jnp.maximum(jnp.abs(inter_n + intra_n), jnp.exp(-m_t))
+        h_out = (inter_h + intra_h) / denom[..., None]     # (B,L,H,hd)
+        # chunk-end state
+        g_l = g[:, -1, :]                                  # (B,H)
+        m_end = jnp.maximum(g_l + m0, g_l + a_run[:, -1, :])
+        c_new = (jnp.exp(g_l + m0 - m_end)[..., None, None] * c0
+                 + jnp.einsum("blhk,blhj,blh->bhkj",
+                              kc.astype(jnp.float32), vc.astype(jnp.float32),
+                              jnp.exp(g_l[:, None, :] - g + ic - m_end[:, None, :])))
+        n_new = (jnp.exp(g_l + m0 - m_end)[..., None] * n0
+                 + jnp.einsum("blhk,blh->bhk", kc.astype(jnp.float32),
+                              jnp.exp(g_l[:, None, :] - g + ic - m_end[:, None, :])))
+        return (c_new, n_new, m_end), h_out
+
+    carry = (state["c"], state["n"], state["m"])
+    swap = lambda a: a.swapaxes(0, 1)            # scan over chunk dim
+    (c, n, m), hs = jax.lax.scan(
+        chunk_step, carry,
+        (swap(q), swap(k), swap(v), swap(it), swap(ft)))
+    hs = hs.swapaxes(0, 1).reshape(b, s, h, hd)  # (B,S,H,hd)
+    hs = hs.astype(x.dtype) * og.reshape(b, s, h, hd)
+    flat = apply_norm(hs.reshape(b, s, h * hd), p["norm"])
+    y = jnp.einsum("bshk,hkd->bsd", flat.reshape(b, s, h, hd),
+                   p["w_out"].astype(x.dtype))
+    return y, {"c": c, "n": n, "m": m}
+
+
+def mlstm_decode(x, p, cfg, state):
+    """O(1) one-token step. x: (B, 1, d)."""
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    q, k, v, it, ft, og = _mlstm_proj(x, p)
+    q, k, v, og = (a[:, 0] for a in (q, k, v, og))        # (B,H,hd)
+    it, ft = it[:, 0], ft[:, 0]                            # (B,H)
+    m_new = jnp.maximum(ft + state["m"], it)
+    fp = jnp.exp(ft + state["m"] - m_new)[..., None]
+    ip = jnp.exp(it - m_new)[..., None]
+    k32, v32, q32 = (a.astype(jnp.float32) for a in (k, v, q))
+    c = fp[..., None] * state["c"] + ip[..., None] * (k32[..., :, None]
+                                                      * v32[..., None, :])
+    n = fp * state["n"] + ip * k32
+    num = jnp.einsum("bhk,bhkj->bhj", q32, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q32, n)),
+                      jnp.exp(-m_new))
+    hvec = (num / den[..., None]).astype(x.dtype) * og
+    flat = apply_norm(hvec.reshape(b, 1, h * hd), p["norm"])
+    y = jnp.einsum("bshk,hkd->bsd", flat.reshape(b, 1, h, hd),
+                   p["w_out"].astype(x.dtype))
+    return y, {"c": c, "n": n, "m": m_new}
+
+
+def init_mlstm_state(batch, cfg):
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 9)
+    gate = lambda kk: dense_init(kk, (d, h, hd), ("embed", "heads", None),
+                                 0, dtype)
+    rec = lambda kk: dense_init(kk, (h, hd, hd), ("heads", None, None),
+                                (1,), dtype, scale=0.5)
+    return {
+        "wz": gate(ks[0]), "wi": gate(ks[1]), "wf": gate(ks[2]),
+        "wo": gate(ks[3]),
+        "rz": rec(ks[4]), "ri": rec(ks[5]), "rf": rec(ks[6]), "ro": rec(ks[7]),
+        "b_f": (jnp.full((h, hd), 3.0, jnp.float32), ("heads", None)),
+        "norm": norm_init(h * hd),
+        "w_out": dense_init(ks[8], (h, hd, d), ("heads", None, "embed"),
+                            (0, 1), dtype),
+    }
+
+
+def _slstm_step(p, carry, xs):
+    c0, n0, h0, m0 = carry                       # (B,H,hd) x3, m (B,H,hd)
+    xz, xi, xf, xo = xs                          # (B,H,hd) pre-projections
+    r = lambda w: jnp.einsum("bhk,hkj->bhj", h0, w.astype(h0.dtype))
+    z = jnp.tanh(xz + r(p["rz"]))
+    it = (xi + r(p["ri"])).astype(jnp.float32)
+    ft = (xf + r(p["rf"]) + p["b_f"]).astype(jnp.float32)
+    ft = -jax.nn.softplus(-ft)                   # log sigmoid
+    o = jax.nn.sigmoid(xo + r(p["ro"]))
+    m1 = jnp.maximum(ft + m0, it)
+    ip = jnp.exp(it - m1)
+    fp = jnp.exp(ft + m0 - m1)
+    c1 = fp * c0 + ip * z.astype(jnp.float32)
+    n1 = fp * n0 + ip
+    h1 = (o.astype(jnp.float32) * (c1 / jnp.maximum(n1, 1e-6))).astype(h0.dtype)
+    return (c1, n1, h1, m1), h1
+
+
+def slstm_forward(x, p, cfg, state=None):
+    """Sequential sLSTM over (B, S, d).  Returns (y, new_state)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    proj = lambda w: jnp.einsum("bsd,dhk->bshk", x, w.astype(x.dtype))
+    xz, xi, xf, xo = proj(p["wz"]), proj(p["wi"]), proj(p["wf"]), proj(p["wo"])
+    if state is None:
+        state = init_slstm_state(b, cfg)
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    swap = lambda a: a.swapaxes(0, 1)
+    carry, hs = jax.lax.scan(lambda c, xs: _slstm_step(p, c, xs), carry,
+                             (swap(xz), swap(xi), swap(xf), swap(xo)))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)       # (B,S,H,hd)
+    flat = apply_norm(hs.reshape(b, s, h * hd), p["norm"])
+    y = jnp.einsum("bshk,hkd->bsd", flat.reshape(b, s, h, hd),
+                   p["w_out"].astype(x.dtype))
+    c1, n1, h1, m1 = carry
+    return y, {"c": c1, "n": n1, "h": h1, "m": m1}
+
+
+def slstm_decode(x, p, cfg, state):
+    y, st = slstm_forward(x, p, cfg, state)
+    return y, st
+
+
+def init_slstm_state(batch, cfg):
+    h, hd = cfg.n_heads, cfg.head_dim
+    z = lambda: jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": z()}

@@ -1,0 +1,81 @@
+"""Activation sharding constraints via an ambient mesh context.
+
+Model code stays mesh-agnostic: it calls ``shard_batch(x, dim)`` at anchor
+points (attention inputs, scan carries, embeddings, logits chunks) and the
+launch layer decides what that means by installing a context.  Without a
+context every helper is a no-op, so smoke tests and examples run unchanged.
+
+GSPMD generally propagates well through straight-line code but gives up
+inside nested while loops with rich carries (flash-attention statistics) —
+anchoring the loop inputs/outputs keeps the global batch sharded there.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("act_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh, data_axes: tuple, model_axis: str = "model"):
+    tok = _CTX.set({"mesh": mesh, "data": tuple(data_axes),
+                    "model": model_axis})
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def _get():
+    return _CTX.get()
+
+
+def _dp(ctx):
+    d = ctx["data"]
+    return d if len(d) > 1 else d[0]
+
+
+def shard_batch(x, dim: int = 0):
+    """Constrain dim ``dim`` of x to the data axes (if divisible)."""
+    ctx = _get()
+    if ctx is None or x.ndim <= dim:
+        return x
+    import numpy as np
+    n = int(np.prod([ctx["mesh"].shape[a] for a in ctx["data"]]))
+    if x.shape[dim] % n != 0 or x.shape[dim] < n:
+        return x
+    # UNCONSTRAINED elsewhere: a hard None would force replication and
+    # destroy e.g. the heads sharding GSPMD propagated from the weights.
+    spec = [P.UNCONSTRAINED] * x.ndim
+    spec[dim] = _dp(ctx)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx["mesh"], P(*spec)))
+
+
+def shard_spec(x, **dim_axes):
+    """Constrain named dims: shard_spec(x, d0='data', d2='model')."""
+    ctx = _get()
+    if ctx is None:
+        return x
+    spec = [P.UNCONSTRAINED] * x.ndim
+    for key, kind in dim_axes.items():
+        dim = int(key[1:])
+        if dim >= x.ndim:
+            continue
+        import numpy as np
+        if kind == "data":
+            n = int(np.prod([ctx["mesh"].shape[a] for a in ctx["data"]]))
+            if x.shape[dim] % n == 0 and x.shape[dim] >= n:
+                spec[dim] = _dp(ctx)
+        elif kind == "model":
+            n = ctx["mesh"].shape[ctx["model"]]
+            if x.shape[dim] % n == 0 and x.shape[dim] >= n:
+                spec[dim] = ctx["model"]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx["mesh"], P(*spec)))

@@ -1,0 +1,112 @@
+"""Logical-axis -> mesh-axis sharding rules (TP / FSDP / EP).
+
+Model code annotates every parameter dim with a logical name (see
+``models/common.py``); this module resolves those names against a mesh:
+
+  TP  ('model'):  vocab, heads, kv, ffn, expert, lru
+  FSDP('data' [+ 'pod']): embed  — every weight's d_model dim is sharded
+      across the data axes, ZeRO-3 style; XLA inserts the per-layer
+      all-gathers (params) and reduce-scatters (grads).
+
+A dim is only sharded when its size divides the axis size — e.g. MQA's one
+kv head stays replicated on a 16-way model axis rather than failing.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TP_AXES = ("vocab", "heads", "kv", "ffn", "expert", "lru")
+
+
+def data_axis_names(mesh: Mesh) -> tuple:
+    """The batch/FSDP axes present in this mesh ('pod' composes with 'data')."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def resolve_axes(logical: tuple, shape: tuple, mesh: Mesh,
+                 fsdp: bool = True, use_tp: bool = True,
+                 expert_fsdp: bool = True) -> P:
+    """Logical names + concrete shape -> PartitionSpec (divisibility-safe).
+
+    use_tp=False: the 'model' axis joins the FSDP axes instead of carrying
+    tensor parallelism (right for collective-bound models that fit without
+    TP).  expert_fsdp=False: weights with an 'expert' dim skip FSDP on
+    their other dims (EP-resident experts).
+    """
+    daxes = data_axis_names(mesh)
+    fsdp_axes = daxes if use_tp else daxes + (
+        ("model",) if "model" in mesh.axis_names else ())
+    is_expert_w = "expert" in logical
+    spec: list = []
+    used_model = False
+    used_data = False
+    for name, dim in zip(logical, shape):
+        entry = None
+        if (name in TP_AXES and use_tp and not used_model
+                and "model" in mesh.axis_names):
+            if dim % mesh.shape["model"] == 0 and dim > 0:
+                entry = "model"
+                used_model = True
+        elif (name == "embed" and fsdp and not used_data and fsdp_axes
+                and not (is_expert_w and not expert_fsdp)):
+            n = _axis_size(mesh, fsdp_axes)
+            if dim % n == 0 and dim >= n:
+                entry = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                used_data = True
+        spec.append(entry)
+    return P(*spec)
+
+
+def param_shardings(axes_tree: Any, shapes_tree: Any, mesh: Mesh,
+                    fsdp: bool = True, use_tp: bool = True,
+                    expert_fsdp: bool = True) -> Any:
+    """Pytree of logical-axes tuples + shapes -> pytree of NamedSharding."""
+    is_axes = lambda a: isinstance(a, tuple) and all(
+        x is None or isinstance(x, str) for x in a)
+    return jax.tree.map(
+        lambda ax, sh: NamedSharding(
+            mesh, resolve_axes(ax, sh.shape, mesh, fsdp, use_tp,
+                               expert_fsdp)),
+        axes_tree, shapes_tree, is_leaf=is_axes)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Batch dim over all data axes."""
+    d = data_axis_names(mesh)
+    return P(d if len(d) > 1 else d[0])
+
+
+def batch_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    d = data_axis_names(mesh)
+    return NamedSharding(mesh, P(*((d if len(d) > 1 else d[0]),)
+                                 + (None,) * (ndim - 1)))
+
+
+def cache_sharding(mesh: Mesh, shape: tuple, n_kv: Optional[int] = None,
+                   batch_dim: int = 0, kv_dim: Optional[int] = None,
+                   seq_dim: Optional[int] = None) -> NamedSharding:
+    """KV-cache policy: batch over data axes; kv-heads over 'model' when
+    divisible, else the sequence dim over 'model' (distributed decode)."""
+    d = data_axis_names(mesh)
+    spec = [None] * len(shape)
+    if shape[batch_dim] % _axis_size(mesh, d) == 0 and shape[batch_dim] > 1:
+        spec[batch_dim] = d if len(d) > 1 else d[0]
+    nm = mesh.shape.get("model", 1)
+    if (kv_dim is not None and n_kv and n_kv % nm == 0):
+        spec[kv_dim] = "model"
+    elif seq_dim is not None and shape[seq_dim] % nm == 0:
+        spec[seq_dim] = "model"
+    return NamedSharding(mesh, P(*spec))

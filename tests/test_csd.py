@@ -1,0 +1,98 @@
+"""CSD recoding tests — paper Section V invariants."""
+
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.csd import (bits_to_int, convert_to_csd, csd_transform,
+                            digits_to_int, int_to_bits, nonzero_digit_count,
+                            pn_from_digits)
+
+
+class TestListing1:
+    """Faithful port of the paper's Listing 1."""
+
+    def test_paper_example_15(self):
+        # 15 = 16 - 1  <->  1111 -> 1000(-1): four set bits become two.
+        rng = random.Random(0)
+        d = convert_to_csd(int_to_bits(15, 4), rng)
+        assert digits_to_int(d) == 15
+        assert sum(1 for x in d if x) == 2
+        assert d == [1, 0, 0, 0, -1]
+
+    def test_width_grows_by_one(self):
+        rng = random.Random(0)
+        for v in (0, 1, 7, 255):
+            assert len(convert_to_csd(int_to_bits(v, 8), rng)) == 9
+
+    @given(st.integers(0, 2**16 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_value_preserved(self, v):
+        rng = random.Random(v)
+        d = convert_to_csd(int_to_bits(v, 16), rng)
+        assert digits_to_int(d) == v
+
+    @given(st.integers(0, 2**16 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_never_more_nonzeros(self, v):
+        """CSD is 'strictly better': set-digit count never increases."""
+        rng = random.Random(v * 7 + 1)
+        bits = int_to_bits(v, 16)
+        d = convert_to_csd(bits, rng)
+        assert sum(1 for x in d if x) <= sum(bits)
+
+    @given(st.integers(0, 2**12 - 1))
+    @settings(max_examples=100, deadline=None)
+    def test_chain3_strictly_reduces(self, v):
+        """Any run of >= 3 ones strictly reduces the digit count."""
+        rng = random.Random(v)
+        bits = int_to_bits(v, 12)
+        s = "".join(map(str, bits))
+        has_chain3 = "111" in s
+        d = convert_to_csd(bits, rng)
+        if has_chain3:
+            assert sum(1 for x in d if x) < sum(bits)
+
+    def test_coin_flip_balances(self):
+        """Length-2 chains recode ~half the time (the randomized tie-break)."""
+        v = 0b011  # single length-2 chain
+        outcomes = set()
+        for seed in range(64):
+            d = convert_to_csd(int_to_bits(v, 4), random.Random(seed))
+            outcomes.add(tuple(d))
+        assert len(outcomes) == 2  # both representations observed
+
+
+class TestVectorized:
+    def test_matches_reference_distributionally(self):
+        vals = np.arange(4096) % 256
+        digs = csd_transform(vals, 8, np.random.default_rng(0))
+        w = 1 << np.arange(9)
+        assert ((digs.astype(np.int64) * w).sum(-1) == vals).all()
+
+    def test_pn_from_digits(self):
+        vals = np.arange(256)
+        digs = csd_transform(vals, 8, np.random.default_rng(1))
+        p, n = pn_from_digits(digs)
+        assert ((p - n) == vals).all()
+        assert (p >= 0).all() and (n >= 0).all()
+
+    def test_17pct_reduction_at_8bit(self):
+        """Fig 9: CSD reduces hardware ~17% for uniform random matrices."""
+        rng = np.random.default_rng(42)
+        vals = rng.integers(0, 128, size=200_000)  # 7-bit magnitudes
+        naive_ones = np.unpackbits(
+            vals.astype(np.uint8)[:, None], axis=1).sum()
+        digs = csd_transform(vals, 7, rng)
+        csd_ones = nonzero_digit_count(digs)
+        reduction = 1.0 - csd_ones / naive_ones
+        assert 0.12 <= reduction <= 0.22, f"CSD reduction {reduction:.3f}"
+
+    def test_rejects_out_of_range(self):
+        with pytest.raises(ValueError):
+            csd_transform(np.array([256]), 8)
+        with pytest.raises(ValueError):
+            csd_transform(np.array([-1]), 8)

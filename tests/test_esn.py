@@ -1,0 +1,89 @@
+"""Echo State Network behaviour — the paper's motivating workload."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.esn import (ESNConfig, fit_readout, init_esn, nrmse, predict,
+                            run_reservoir)
+from repro.core.ridge import ridge_fit
+
+
+def _sine_task(n=800):
+    t = np.arange(n) * 0.1
+    sig = np.sin(t) + 0.5 * np.sin(0.37 * t)
+    u = sig[:-1, None].astype(np.float32)
+    y = sig[1:, None].astype(np.float32)
+    return u, y
+
+
+class TestRidge:
+    def test_recovers_linear_map(self):
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((500, 20)).astype(np.float32)
+        w_true = rng.standard_normal((20, 3)).astype(np.float32)
+        y = x @ w_true
+        w = ridge_fit(jnp.asarray(x), jnp.asarray(y), lam=1e-8)
+        np.testing.assert_allclose(np.asarray(w), w_true, atol=1e-3)
+
+    def test_regularization_shrinks(self):
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((100, 10)).astype(np.float32)
+        y = rng.standard_normal((100, 1)).astype(np.float32)
+        w_small = ridge_fit(jnp.asarray(x), jnp.asarray(y), lam=1e-6)
+        w_big = ridge_fit(jnp.asarray(x), jnp.asarray(y), lam=1e3)
+        assert np.linalg.norm(w_big) < np.linalg.norm(w_small)
+
+
+class TestESN:
+    def test_echo_state_property(self):
+        """Spectral radius < 1 => state stays bounded, forgets initial state."""
+        cfg = ESNConfig(reservoir_dim=80, spectral_radius=0.8, seed=0, block=32)
+        p = init_esn(cfg)
+        u = jnp.asarray(np.random.default_rng(0).standard_normal((300, 1)),
+                        jnp.float32)
+        s_zero = run_reservoir(p, u)
+        s_ones = run_reservoir(p, u, x0=jnp.ones(80))
+        assert np.abs(np.asarray(s_zero)).max() <= 1.0  # tanh bound
+        # initial-condition difference decays (echo state property)
+        d0 = np.abs(np.asarray(s_zero[0] - s_ones[0])).max()
+        dT = np.abs(np.asarray(s_zero[-1] - s_ones[-1])).max()
+        assert dT < d0 * 0.05
+
+    def test_learns_sine_prediction(self):
+        cfg = ESNConfig(reservoir_dim=200, element_sparsity=0.8, seed=2,
+                        block=64)
+        p = init_esn(cfg)
+        u, y = _sine_task()
+        states = run_reservoir(p, jnp.asarray(u))
+        p = fit_readout(p, states[100:], jnp.asarray(y[100:]))
+        err = float(nrmse(predict(p, states[100:]), jnp.asarray(y[100:])))
+        assert err < 0.05, err
+
+    def test_int8_mode_close_to_fp32(self):
+        """[16]: quantized reservoirs lose little accuracy."""
+        u, y = _sine_task()
+        errs = {}
+        for mode in ("fp32", "int8-csd"):
+            cfg = ESNConfig(reservoir_dim=150, element_sparsity=0.8,
+                            mode=mode, seed=3, block=64)
+            p = init_esn(cfg)
+            states = run_reservoir(p, jnp.asarray(u))
+            p = fit_readout(p, states[100:], jnp.asarray(y[100:]))
+            errs[mode] = float(nrmse(predict(p, states[100:]),
+                                     jnp.asarray(y[100:])))
+        assert errs["int8-csd"] < max(3 * errs["fp32"], 0.1)
+
+    def test_batched_inputs(self):
+        cfg = ESNConfig(reservoir_dim=50, seed=4, block=32)
+        p = init_esn(cfg)
+        u = jnp.ones((3, 20, 1))
+        s = run_reservoir(p, u)
+        assert s.shape == (3, 20, 50)
+        assert np.isfinite(np.asarray(s)).all()
+
+    def test_reservoir_sparsity_honored(self):
+        cfg = ESNConfig(reservoir_dim=100, element_sparsity=0.9, seed=5,
+                        block=32)
+        p = init_esn(cfg)
+        assert abs(p.w.element_sparsity - 0.9) < 0.03

@@ -1,0 +1,63 @@
+"""int8 frozen-weight serving (the paper's technique on LM decode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.quantize import (dequant_tree, is_quantized_leaf,
+                                   quant_struct_like, quantize_tree)
+from repro.models.transformer import LM
+
+
+class TestQuantize:
+    def test_roundtrip_error_bound(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.standard_normal((64, 512, 256)), jnp.float32)
+        q = quantize_tree({"w": w})
+        assert is_quantized_leaf(q["w"])
+        assert q["w"]["q"].dtype == jnp.int8
+        assert q["w"]["scale"].shape == (64, 256)  # (layers, out)
+        back = dequant_tree(q, jnp.float32)["w"]
+        err = jnp.abs(back - w)
+        bound = jnp.abs(w).max() / 127 + 1e-6
+        assert float(err.max()) <= float(bound) * 1.01
+
+    def test_small_leaves_untouched(self):
+        tree = {"norm": jnp.ones((64, 512)), "bias": jnp.ones((128,))}
+        q = quantize_tree(tree)
+        assert not is_quantized_leaf(q["norm"])  # stacked norm vector
+        assert not is_quantized_leaf(q["bias"])
+
+    def test_struct_like_matches_quantize(self):
+        rng = np.random.default_rng(1)
+        tree = {"w": jnp.asarray(rng.standard_normal((8, 256, 128)),
+                                 jnp.bfloat16),
+                "n": jnp.ones((256,))}
+        structs = jax.eval_shape(lambda: tree)
+        qs = quant_struct_like(structs)
+        qt = quantize_tree(tree)
+        assert qs["w"]["q"].shape == qt["w"]["q"].shape
+        assert qs["w"]["scale"].shape == qt["w"]["scale"].shape
+        assert qs["n"].shape == qt["n"].shape
+
+    def test_int8_decode_close_to_bf16(self):
+        """Quantized-serving decode stays close to the bf16 path."""
+        cfg = reduced(get_config("qwen3-32b"))
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0)).params
+        toks = jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 8)))
+        logits, caches = lm.prefill(params, {"tokens": toks[:, :7]},
+                                    cache_len=8)
+        ref, _ = lm.decode_step(params, caches, toks[:, 7:])
+
+        qparams = quantize_tree(params)
+        logits_q, caches_q = lm.prefill(qparams, {"tokens": toks[:, :7]},
+                                        cache_len=8)
+        got, _ = lm.decode_step(qparams, caches_q, toks[:, 7:])
+        a = np.asarray(got, np.float32).ravel()
+        b = np.asarray(ref, np.float32).ravel()
+        # int8 weights perturb logits but preserve ranking at smoke scale
+        assert np.corrcoef(a, b)[0, 1] > 0.98

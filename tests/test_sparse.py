@@ -1,0 +1,80 @@
+"""FixedMatrix / BlockSparse — structure culling and exactness."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.sparse import BlockSparse, FixedMatrix, random_sparse_matrix
+
+
+class TestBlockSparse:
+    @given(st.integers(30, 200), st.integers(30, 200),
+           st.sampled_from([16, 32, 64]), st.floats(0.5, 0.99))
+    @settings(max_examples=15, deadline=None)
+    def test_roundtrip_and_matmul(self, r, c, block, sparsity):
+        rng = np.random.default_rng(r * c)
+        d = random_sparse_matrix(r, c, sparsity, rng).astype(np.float32)
+        bs = BlockSparse.from_dense(d, block=block)
+        np.testing.assert_allclose(bs.to_dense(), d, atol=0)
+        x = rng.standard_normal((2, r)).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(bs.matmul_ref(jnp.asarray(x))), x @ d,
+            rtol=1e-5, atol=1e-4)
+
+    def test_zero_blocks_culled(self):
+        d = np.zeros((128, 128), np.float32)
+        d[:32, :32] = 1.0  # single nonzero block at block=32
+        bs = BlockSparse.from_dense(d, block=32)
+        assert bs.n_blocks_nnz == 1
+        assert bs.n_blocks_total == 16
+        assert bs.data.shape == (1, 32, 32)
+
+    def test_all_zero_matrix(self):
+        bs = BlockSparse.from_dense(np.zeros((64, 64), np.float32), block=32)
+        assert bs.n_blocks_nnz == 0
+        out = bs.matmul_ref(jnp.ones((3, 64)))
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+class TestFixedMatrix:
+    def test_int_paths_agree(self):
+        rng = np.random.default_rng(5)
+        d = random_sparse_matrix(96, 64, 0.9, rng)
+        fm = FixedMatrix.compile(d, mode="csd", block=32, rng=rng)
+        a = jnp.asarray(rng.integers(-100, 100, size=(4, 96)))
+        np.testing.assert_array_equal(
+            np.asarray(fm.matvec_int_exact(a)),
+            np.asarray(fm.matvec_int_dense_ref(a)))
+
+    @pytest.mark.parametrize("mode", ["pn", "csd"])
+    def test_quantization_error_bounded(self, mode):
+        rng = np.random.default_rng(6)
+        d = random_sparse_matrix(64, 64, 0.8, rng)
+        fm = FixedMatrix.compile(d, weight_bits=8, mode=mode, block=32, rng=rng)
+        err = np.abs(np.asarray(fm.dense_f32()) - d).max()
+        assert err <= fm.scale * 0.5 + 1e-7
+
+    def test_csd_reduces_ones(self):
+        rng = np.random.default_rng(7)
+        d = random_sparse_matrix(128, 128, 0.7, rng)
+        pn = FixedMatrix.compile(d, mode="pn", block=64, rng=rng)
+        csd = FixedMatrix.compile(d, mode="csd", block=64,
+                                  rng=np.random.default_rng(7))
+        assert csd.ones < pn.ones
+
+    def test_cost_report(self):
+        rng = np.random.default_rng(8)
+        d = random_sparse_matrix(256, 256, 0.95, rng)
+        fm = FixedMatrix.compile(d, block=64, rng=rng)
+        cost = fm.fpga_cost()
+        assert cost.luts == fm.ones
+        assert cost.cycles == 8 + 8 + 8 + 2
+        assert cost.latency_ns < 120
+
+    def test_element_sparsity_tracked(self):
+        rng = np.random.default_rng(9)
+        d = random_sparse_matrix(200, 200, 0.9, rng)
+        fm = FixedMatrix.compile(d, block=64, rng=rng)
+        assert abs(fm.element_sparsity - 0.9) < 0.03

@@ -1,0 +1,85 @@
+"""Register-level bit-serial emulator vs exact integer gemv (Section III)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bitplanes import decompose, from_bitplanes, pn_split, to_bitplanes
+from repro.core.spatial import eq5_latency, simulate_gemv
+
+
+class TestBitplanes:
+    def test_pn_split_reconstructs(self):
+        rng = np.random.default_rng(0)
+        m = rng.integers(-128, 128, size=(32, 16))
+        p, n = pn_split(m)
+        assert ((p - n) == m).all()
+        assert (p >= 0).all() and (n >= 0).all()
+        assert ((p == 0) | (n == 0)).all()  # disjoint support
+
+    @given(st.integers(1, 9), st.sampled_from(["pn", "csd"]))
+    @settings(max_examples=20, deadline=None)
+    def test_decompose_roundtrip(self, bits, mode):
+        rng = np.random.default_rng(bits)
+        lo, hi = -(1 << (bits - 1)), (1 << (bits - 1))
+        m = rng.integers(lo, hi, size=(17, 9))
+        dp = decompose(m, bits, mode=mode, rng=rng)
+        assert (dp.to_dense() == m).all()
+
+    def test_bitplane_roundtrip(self):
+        rng = np.random.default_rng(3)
+        m = rng.integers(0, 256, size=(8, 8))
+        assert (from_bitplanes(to_bitplanes(m, 8)) == m).all()
+
+    def test_csd_fewer_or_equal_ones(self):
+        rng = np.random.default_rng(7)
+        m = rng.integers(-128, 128, size=(64, 64))
+        pn = decompose(m, 8, mode="pn")
+        csd = decompose(m, 8, mode="csd", rng=rng)
+        assert csd.ones <= pn.ones
+        # Fig 9: ~17% for uniform random 8-bit
+        assert csd.ones < 0.92 * pn.ones
+
+
+class TestEmulator:
+    """The emulator must compute the exact gemv — the architecture works."""
+
+    @pytest.mark.parametrize("mode", ["pn", "csd"])
+    @pytest.mark.parametrize("r,c,bi,bw", [
+        (8, 4, 8, 8),
+        (16, 8, 6, 8),
+        (13, 5, 8, 8),     # non-power-of-two rows exercise leaf padding
+        (64, 16, 8, 8),
+        (100, 3, 4, 3),
+        (5, 7, 12, 6),
+    ])
+    def test_exact_gemv(self, mode, r, c, bi, bw):
+        rng = np.random.default_rng(r * 1000 + c)
+        V = rng.integers(-(1 << (bw - 1)), 1 << (bw - 1), size=(r, c))
+        a = rng.integers(-(1 << (bi - 1)), 1 << (bi - 1), size=(r,))
+        res = simulate_gemv(V, a, input_bits=bi, weight_bits=bw, mode=mode,
+                            rng=rng)
+        np.testing.assert_array_equal(res.output, a @ V)
+
+    def test_sparse_matrix_exact(self):
+        rng = np.random.default_rng(11)
+        V = rng.integers(-128, 128, size=(32, 8))
+        V[rng.random(V.shape) < 0.9] = 0
+        a = rng.integers(-128, 128, size=(32,))
+        res = simulate_gemv(V, a, input_bits=8, weight_bits=8)
+        np.testing.assert_array_equal(res.output, a @ V)
+
+    def test_eq5_paper_example(self):
+        """'given 8-bit inputs and weights and a 1024x1024 weight matrix, we
+        perform the vector-matrix product in 8+8+log2(1024)+2 = 28 cycles'"""
+        assert eq5_latency(8, 8, 1024) == 28
+
+    def test_ones_metric_reported(self):
+        rng = np.random.default_rng(2)
+        V = rng.integers(-8, 8, size=(16, 4))
+        res = simulate_gemv(V, np.ones(16, dtype=int), 4, 4, rng=rng)
+        assert res.ones > 0
+        zero = simulate_gemv(np.zeros((16, 4), int), np.ones(16, dtype=int), 4, 4)
+        assert zero.ones == 0
+        np.testing.assert_array_equal(zero.output, np.zeros(4, int))
