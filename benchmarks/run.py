@@ -18,6 +18,8 @@ arithmetic.
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 
@@ -30,6 +32,8 @@ from repro.core.bitplanes import decompose
 from repro.core.sparse import random_sparse_matrix
 
 ROWS: list = []
+FAST = False                      # --fast: smaller sweeps for CI smoke runs
+JSON_OUT = "BENCH_serve.json"     # --json-out: serve-family results
 
 
 def emit(name: str, value: float, derived=""):
@@ -250,16 +254,127 @@ def kernel_walltimes():
          f"ones={fm.ones};planes_kept={sum(op.plane_mask)}")
 
 
+# ---------------------------------------------------------------------------
+# Serving: fused batched rollout engine vs the per-step scan baseline
+# ---------------------------------------------------------------------------
+def _serve_params(dim: int, mode: str, seed: int = 0):
+    """Frozen reservoir sized for throughput runs (no spectral rescale —
+    eigensolves at dim 2048 dominate setup and don't affect timing)."""
+    import jax.numpy as jnp
+    from repro.core.esn import ESNConfig, ESNParams
+    from repro.core.sparse import FixedMatrix
+    rng = np.random.default_rng(seed)
+    w = random_sparse_matrix(dim, dim, 0.9, rng) * 0.05
+    fm = FixedMatrix.compile(w, weight_bits=8, mode="csd", block=128, rng=rng)
+    cfg = ESNConfig(reservoir_dim=dim, input_dim=4, mode=mode, block=128,
+                    seed=seed)
+    w_in = jnp.asarray(rng.uniform(-0.5, 0.5, (4, dim)), jnp.float32)
+    return ESNParams(w=fm, w_in=w_in, w_out=None, config=cfg)
+
+
+def _time_rollout(fn, reps: int) -> float:
+    fn()  # warmup (compile)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def serve_rollout():
+    """steps/sec: fused engine (xla + pallas-interpret) vs scan baseline.
+
+    Writes the sweep to JSON_OUT for CI artifact upload alongside the CSV
+    rows.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.esn import run_reservoir
+    from repro.serve import ReservoirEngine
+
+    dims = (256, 512) if FAST else (512, 1024, 2048)
+    batches = (1, 8) if FAST else (1, 8, 64)
+    t_steps = 8 if FAST else 32
+    reps = 2 if FAST else 3
+    results = []
+    modes = ("fp32",) if FAST else ("fp32", "int8-csd")
+    for mode in modes:
+        for dim in dims if mode == "fp32" else dims[:1]:
+            params = _serve_params(dim, mode)
+            engine = ReservoirEngine(params)
+            for batch in batches:
+                rng = np.random.default_rng(1)
+                u = jnp.asarray(rng.standard_normal((batch, t_steps, 4)),
+                                jnp.float32)
+                t_scan = _time_rollout(
+                    lambda: jax.block_until_ready(
+                        run_reservoir(params, u, engine="scan")), reps)
+                t_fused = _time_rollout(
+                    lambda: jax.block_until_ready(engine.rollout(u)), reps)
+                steps = batch * t_steps
+                sps_scan = steps / t_scan
+                sps_fused = steps / t_fused
+                speedup = t_scan / t_fused
+                emit(f"serve/{mode}/dim={dim}/batch={batch}/scan",
+                     t_scan * 1e6 / steps, f"steps_per_sec={sps_scan:.0f}")
+                emit(f"serve/{mode}/dim={dim}/batch={batch}/fused",
+                     t_fused * 1e6 / steps,
+                     f"steps_per_sec={sps_fused:.0f};speedup={speedup:.2f}")
+                results.append({
+                    "mode": mode, "dim": dim, "batch": batch,
+                    "steps": t_steps, "backend": "xla",
+                    "scan_steps_per_sec": sps_scan,
+                    "fused_steps_per_sec": sps_fused,
+                    "speedup": speedup,
+                })
+    # Pallas rollout kernel datapoint (interpret mode on CPU — the number
+    # shows the launch works end-to-end, not TPU performance).
+    params = _serve_params(256, "fp32", seed=2)
+    engine = ReservoirEngine(params, backend="pallas")
+    u = jnp.asarray(np.random.default_rng(2).standard_normal((8, 8, 4)),
+                    jnp.float32)
+    t_pal = _time_rollout(
+        lambda: jax.block_until_ready(engine.rollout(u)), 2)
+    emit("serve/fp32/dim=256/batch=8/pallas_interpret", t_pal * 1e6 / 64,
+         f"steps_per_sec={64 / t_pal:.0f}")
+    payload = {
+        "benchmark": "serve_rollout",
+        "unit": "reservoir steps/sec (one Eq.1 update per sequence)",
+        "baseline": "run_reservoir(engine='scan'): per-step lax.scan, "
+                    "vmap over batch",
+        "fused": "repro.serve.ReservoirEngine: jitted scan, hoisted input "
+                 "projection, native batch, dense/culled dispatch",
+        "fast_mode": FAST,
+        "rows": results,
+    }
+    with open(JSON_OUT, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"# wrote {JSON_OUT} ({len(results)} rows)", file=sys.stderr)
+
+
 ALL = [fig05_bit_sparsity, fig06_element_vs_bit_sparse, fig07_matrix_size,
        fig08_bitwidth, fig09_csd, fig10_large_area, fig11_large_fmax,
        fig12_large_power, fig13_14_dim_sweep, fig15_16_sparsity_sweep,
        fig17_18_batching, fig19_20_sigma_dim, fig21_22_sigma_sparsity,
-       fig23_sigma_batching, esn_quality, kernel_walltimes]
+       fig23_sigma_batching, esn_quality, kernel_walltimes, serve_rollout]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    global FAST, JSON_OUT
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller sweeps (CI smoke)")
+    ap.add_argument("--only", default="",
+                    help="run only families whose name contains this")
+    ap.add_argument("--json-out", default=JSON_OUT,
+                    help="path for the serve-family JSON results")
+    args = ap.parse_args(argv)
+    FAST = args.fast
+    JSON_OUT = args.json_out
+
     print("name,us_per_call,derived")
     for fn in ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
         t0 = time.perf_counter()
         fn()
         dt = time.perf_counter() - t0

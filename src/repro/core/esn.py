@@ -9,6 +9,9 @@ here it runs through :class:`repro.core.sparse.FixedMatrix`, so the same
 offline-compiled structure backs the float reference path, the exact-integer
 digit-plane path (paper [16]-style integer ESN), and the Pallas kernels.
 
+Rollouts dispatch to the fused batched engine in :mod:`repro.serve.engine`
+by default; pass ``engine="scan"`` for the legacy per-step scan baseline.
+
 Reservoir construction follows the standard echo-state heuristics the paper
 cites: Bernoulli element sparsity ([5] uses 75%, [10] recommends >80%),
 spectral-radius rescaling below 1, and uniform input weights.
@@ -116,14 +119,12 @@ def _step_int8(params: ESNParams, x: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray
     return (1.0 - cfg.leak) * x + cfg.leak * nxt
 
 
-def run_reservoir(params: ESNParams, inputs: jnp.ndarray,
-                  x0: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Roll the reservoir over ``inputs`` (T, input_dim) -> states (T, dim).
-
-    Batched inputs (B, T, input_dim) vmap over the batch dimension.
-    """
+def _run_reservoir_scan(params: ESNParams, inputs: jnp.ndarray,
+                        x0: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Legacy per-step rollout: lax.scan of one step, vmap over batch."""
     if inputs.ndim == 3:
-        return jax.vmap(lambda seq: run_reservoir(params, seq, x0))(inputs)
+        return jax.vmap(lambda seq: _run_reservoir_scan(params, seq, x0)
+                        )(inputs)
     cfg = params.config
     step = _step_int8 if cfg.mode.startswith("int8") else _step_fp32
     if x0 is None:
@@ -135,6 +136,31 @@ def run_reservoir(params: ESNParams, inputs: jnp.ndarray,
 
     _, states = jax.lax.scan(body, x0, inputs.astype(jnp.float32))
     return states
+
+
+def run_reservoir(params: ESNParams, inputs: jnp.ndarray,
+                  x0: jnp.ndarray | None = None,
+                  engine: str = "auto") -> jnp.ndarray:
+    """Roll the reservoir over ``inputs`` (T, input_dim) -> states (T, dim).
+
+    Batched inputs (B, T, input_dim) return (B, T, dim) states.
+
+    ``engine`` picks the rollout implementation:
+      * "auto" / "xla" / "pallas" — the fused batched engine in
+        :mod:`repro.serve.engine` (input projection hoisted, native batch,
+        int8 per-step requantization preserved).
+      * "scan" — the legacy per-step ``lax.scan`` path (benchmark
+        baseline).
+    """
+    if engine == "scan":
+        return _run_reservoir_scan(params, inputs, x0)
+    if engine not in ("auto", "xla", "pallas"):
+        raise ValueError(f"unknown engine {engine!r}; expected one of "
+                         "'auto', 'xla', 'pallas', 'scan'")
+    from repro.serve.engine import engine_for  # deferred: serve imports esn
+    eng = engine_for(params) if engine == "auto" else engine_for(
+        params, backend=engine)
+    return eng.rollout(jnp.asarray(inputs), x0)
 
 
 def fit_readout(params: ESNParams, states: jnp.ndarray, targets: jnp.ndarray,

@@ -1,0 +1,1 @@
+"""reservoir_rollout kernel package: fused T-step batched ESN rollout."""

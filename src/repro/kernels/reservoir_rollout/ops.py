@@ -1,0 +1,102 @@
+"""Offline "compile" step: FixedMatrix -> static rollout plan -> Pallas call.
+
+Mirrors the paper's flow: the reservoir matrix is frozen, so the reduction
+structure (which blocks exist, which digit planes are populated) is decided
+once here, offline, and baked into the kernel as trace-time constants.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse import FixedMatrix
+from repro.kernels.reservoir_rollout.reservoir_rollout import reservoir_rollout
+
+
+def _pad_axis(a: np.ndarray, axis: int, size: int) -> np.ndarray:
+    pad = size - a.shape[axis]
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return np.pad(a, widths)
+
+
+class FusedRollout:
+    """Precompiled fused multi-step rollout for one frozen reservoir.
+
+    Offline (init): gather the nonzero tiles (fp32) or the per-plane digit
+    tiles (int8) of the FixedMatrix, and build the static per-column
+    reduction plan the kernel unrolls.  Online (``__call__``): one Pallas
+    launch rolls the whole (T, B) workload, state resident in VMEM.
+    """
+
+    def __init__(self, fm: FixedMatrix, w_in, *, leak: float = 1.0,
+                 mode: str = "fp32", state_bits: int = 8,
+                 interpret: bool = True):
+        assert fm.shape[0] == fm.shape[1], "reservoir matrix must be square"
+        assert mode in ("fp32", "int8"), mode
+        bk = fm.blocks.block
+        nbr, nbc = fm.blocks.mask.shape
+        assert nbr == nbc
+        self.dim = fm.shape[0]
+        self.block = bk
+        self.rpad = nbc * bk
+        self.leak = float(leak)
+        self.mode = mode
+        self.interpret = interpret
+        self.smax = (1 << (state_bits - 1)) - 1
+        self.recur_scale = fm.scale / self.smax
+
+        cols = fm.blocks.block_cols
+        rows = fm.blocks.block_rows
+        if mode == "fp32":
+            data = np.asarray(fm.blocks.data, np.float32)
+            # Per output column, terms in ascending row order — the same
+            # accumulation order as BlockSparse.matmul_ref, so the fused
+            # kernel is bit-compatible with the reference path.
+            plan = tuple(
+                tuple((int(di), int(rows[di]))
+                      for di in np.flatnonzero(cols == ci))
+                for ci in range(nbc))
+            if data.shape[0] == 0:  # all-zero reservoir: ship one dummy tile
+                data = np.zeros((1, bk, bk), np.float32)
+        else:
+            dig = (fm.planes.pos.astype(np.int8)
+                   - fm.planes.neg.astype(np.int8))          # (W, R, C)
+            width = dig.shape[0]
+            dig = _pad_axis(_pad_axis(dig, 1, nbr * bk), 2, nbc * bk)
+            tiles = dig.reshape(width, nbr, bk, nbc, bk).transpose(0, 1, 3, 2, 4)
+            data = tiles[:, rows, cols]                      # (W, n_nnz, bk, bk)
+            # Plane-level culling on top of block-level culling: a plan term
+            # exists only where that plane of that block has any set digit.
+            plan = tuple(
+                tuple((w, int(di), int(rows[di]))
+                      for di in np.flatnonzero(cols == ci)
+                      for w in range(width)
+                      if np.any(data[w, di]))
+                for ci in range(nbc))
+            if data.shape[1] == 0:
+                data = np.zeros((width, 1, bk, bk), np.int8)
+        self.w_data = jnp.asarray(data)
+        self.col_plan = plan
+        self.n_terms = sum(len(p) for p in plan)
+        self.w_in = jnp.asarray(
+            _pad_axis(np.asarray(w_in, np.float32), 1, self.rpad))
+
+    def __call__(self, u_seq: jnp.ndarray,
+                 x0: jnp.ndarray | None = None) -> jnp.ndarray:
+        """u_seq: (T, B, I) -> states (T, B, dim)."""
+        t, b, _ = u_seq.shape
+        if x0 is None:
+            x0 = jnp.zeros((b, self.rpad), jnp.float32)
+        else:
+            x0 = jnp.asarray(x0, jnp.float32)
+            x0 = jnp.pad(x0, ((0, 0), (0, self.rpad - x0.shape[1])))
+        states = reservoir_rollout(
+            u_seq.astype(jnp.float32), self.w_data, self.w_in, x0,
+            col_plan=self.col_plan, leak=self.leak, block=self.block,
+            mode=self.mode, smax=self.smax, recur_scale=self.recur_scale,
+            interpret=self.interpret)
+        return states[:, :, : self.dim]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the fused reservoir rollout (fp32 + int8)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rollout_fp32_ref(u_seq, w, w_in, x0, *, leak: float = 1.0):
+    """(T, B, I) inputs through a dense reservoir matrix, python-loop scan."""
+    x = x0.astype(jnp.float32)
+    states = []
+    for t in range(u_seq.shape[0]):
+        pre = u_seq[t].astype(jnp.float32) @ w_in + x @ w
+        x = (1.0 - leak) * x + leak * jnp.tanh(pre)
+        states.append(x)
+    return jnp.stack(states)
+
+
+def rollout_int8_ref(u_seq, q, scale, w_in, x0, *, leak: float = 1.0,
+                     state_bits: int = 8):
+    """Exact integer-reservoir rollout: per-step state requantization.
+
+    ``q`` is the int8 quantized reservoir matrix; the recurrent product is
+    exact int32, rescaled by ``scale / smax`` — the same semantics as
+    ``repro.core.esn._step_int8``.
+    """
+    smax = (1 << (state_bits - 1)) - 1
+    x = x0.astype(jnp.float32)
+    states = []
+    for t in range(u_seq.shape[0]):
+        xq = jnp.clip(jnp.round(x * smax), -smax - 1, smax).astype(jnp.int32)
+        recur = (xq @ q.astype(jnp.int32)).astype(jnp.float32)
+        recur = recur * (scale / smax)
+        pre = u_seq[t].astype(jnp.float32) @ w_in + recur
+        x = (1.0 - leak) * x + leak * jnp.tanh(pre)
+        states.append(x)
+    return jnp.stack(states)

@@ -130,7 +130,7 @@ class HloModule:
                     if body:
                         walk(body.group(1), mult * trips)
                 elif opcode in ("fusion", "call", "async-start"):
-                    cm = re.search(r"(?:calls|to)=%?([\w\.\-]+)", rest)
+                    cm = re.search(r"(?:calls|to_apply|to)=%?([\w\.\-]+)", rest)
                     if cm:
                         walk(cm.group(1), mult)
                 elif opcode == "conditional":
@@ -165,12 +165,16 @@ class HloModule:
 
     def _dot_flops(self, name, otype, rest, mult, flops):
         out_elems = math.prod(_shape_dims(otype) or [0])
-        # contracted extent from lhs shape + lhs_contracting_dims
-        ops = re.match(r"\s*%?([\w\.\-]+)\s*,\s*%?([\w\.\-]+)", rest)
+        # contracted extent from lhs shape + lhs_contracting_dims.  Operands
+        # appear either bare (``dot(%p0, %p1)``) or with their type inlined
+        # (``dot(f32[16,512]{1,0} %convert.33, ...)``) depending on the HLO
+        # printer version; accept both.
+        ops = re.match(r"\s*(?:(\S*\[[\d,]*\]\S*)\s+)?%?([\w\.\-]+)", rest)
         k = 1
         cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
         if ops and cm and cm.group(1):
-            lhs_shape = _shape_dims(self.shapes.get(ops.group(1), ""))
+            lhs_type = ops.group(1) or self.shapes.get(ops.group(2), "")
+            lhs_shape = _shape_dims(lhs_type)
             for d in cm.group(1).split(","):
                 di = int(d)
                 if di < len(lhs_shape):

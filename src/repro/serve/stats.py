@@ -1,0 +1,77 @@
+"""Serving telemetry: throughput, latency and padding-efficiency counters.
+
+The unit of account is the *reservoir step* (one Eq.-1 update for one
+sequence) — the figure the paper's latency numbers are quoted in.  Padded
+steps (bucket padding in time, batch padding to the bucket size) are
+tracked separately so the engine can report how much of its raw throughput
+is doing useful work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class ServeStats:
+    calls: int = 0                 # engine invocations (microbatches)
+    sequences: int = 0             # sequences rolled (incl. padding rows)
+    steps_real: int = 0            # steps requested by callers
+    steps_padded: int = 0          # steps actually executed
+    seconds: float = 0.0           # wall time spent in rollouts
+    latency_ewma_s: float = 0.0    # smoothed per-call latency
+    _EWMA_ALPHA = 0.2
+
+    def record_call(self, *, batch: int, steps: int, seconds: float,
+                    real_steps: int | None = None) -> None:
+        """Account one rollout call of ``batch`` sequences x ``steps``."""
+        padded = batch * steps
+        self.calls += 1
+        self.sequences += batch
+        self.steps_padded += padded
+        self.steps_real += padded if real_steps is None else real_steps
+        self.seconds += seconds
+        if self.calls == 1:
+            self.latency_ewma_s = seconds
+        else:
+            a = self._EWMA_ALPHA
+            self.latency_ewma_s = a * seconds + (1 - a) * self.latency_ewma_s
+
+    @property
+    def steps_per_sec(self) -> float:
+        """Raw executed-step throughput (includes padding work)."""
+        return self.steps_padded / self.seconds if self.seconds > 0 else 0.0
+
+    @property
+    def goodput_steps_per_sec(self) -> float:
+        """Useful-step throughput (padding excluded)."""
+        return self.steps_real / self.seconds if self.seconds > 0 else 0.0
+
+    @property
+    def padding_efficiency(self) -> float:
+        """Fraction of executed steps that served real requests."""
+        if self.steps_padded == 0:
+            return 1.0
+        return self.steps_real / self.steps_padded
+
+    def summary(self) -> dict:
+        return {
+            "calls": self.calls,
+            "sequences": self.sequences,
+            "steps_real": self.steps_real,
+            "steps_padded": self.steps_padded,
+            "seconds": self.seconds,
+            "steps_per_sec": self.steps_per_sec,
+            "goodput_steps_per_sec": self.goodput_steps_per_sec,
+            "padding_efficiency": self.padding_efficiency,
+            "latency_ewma_ms": self.latency_ewma_s * 1e3,
+        }
+
+    def render(self) -> str:
+        s = self.summary()
+        return (f"{s['calls']} calls, {s['sequences']} seqs, "
+                f"{s['steps_real']} steps "
+                f"({s['padding_efficiency']:.0%} of executed work useful), "
+                f"{s['steps_per_sec']:.0f} steps/s raw, "
+                f"{s['goodput_steps_per_sec']:.0f} steps/s goodput, "
+                f"p-call latency {s['latency_ewma_ms']:.2f} ms (ewma)")

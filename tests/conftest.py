@@ -1,0 +1,76 @@
+"""Shared test configuration.
+
+Provides a deterministic fallback implementation of the small slice of the
+``hypothesis`` API these tests use (``given``, ``settings``,
+``strategies.integers/floats/sampled_from``) when the real package is not
+installed.  CI installs real hypothesis from requirements.txt, so the
+fallback only activates in minimal environments — it draws examples from a
+seeded ``numpy`` generator, keeping the property tests meaningful and
+reproducible rather than silently skipped.
+"""
+
+from __future__ import annotations
+
+import functools
+import sys
+import types
+import zlib
+
+import numpy as np
+
+
+def _install_hypothesis_fallback() -> None:
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rng):
+            return self._draw(rng)
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = lambda lo, hi: _Strategy(
+        lambda rng: int(rng.integers(lo, hi + 1)))
+    st.floats = lambda lo, hi: _Strategy(
+        lambda rng: float(rng.uniform(lo, hi)))
+    st.sampled_from = lambda seq: _Strategy(
+        lambda rng: seq[int(rng.integers(0, len(seq)))])
+    st.booleans = lambda: _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def settings(max_examples: int = 20, deadline=None, **_kw):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            # NB: no functools.wraps — it would expose the wrapped signature
+            # (including the drawn parameters) and pytest would try to
+            # resolve those as fixtures.
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_fallback_max_examples", 20)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = [s.example_from(rng) for s in strats]
+                    fn(*args, *drawn, **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - depends on environment
+    _install_hypothesis_fallback()

@@ -117,8 +117,10 @@ class TestBcsrMatmul:
         x = jnp.asarray(rng.standard_normal((2, 256)), jnp.float32)
         want = bcsr_matmul_ref(x, op.data, np.asarray(op.cols),
                                np.asarray(op.rows), op.cols_pad, block=128)
+        # rtol-only is too strict for near-zero sums whose accumulation
+        # order differs between the kernel and the oracle.
         np.testing.assert_allclose(np.asarray(op(x)), np.asarray(want),
-                                   rtol=1e-6)
+                                   rtol=1e-5, atol=1e-6)
 
     def test_bf16_inputs(self):
         rng = np.random.default_rng(6)

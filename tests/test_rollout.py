@@ -1,0 +1,211 @@
+"""Fused reservoir-rollout kernel vs the core ESN step references.
+
+Parity contract:
+  * int8 digit-plane mode is BIT-EXACT against the jnp scan reference —
+    the recurrent product is exact integer arithmetic and the float
+    epilogue compiles to the same fused program.
+  * fp32 mode matches to float-accumulation-order tolerance (~1 ulp per
+    step), and exactly reproduces the eager ``_step_fp32`` trajectory
+    within tight allclose bounds.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.esn import (ESNConfig, _step_fp32, _step_int8, init_esn,
+                            run_reservoir)
+from repro.core.sparse import FixedMatrix
+from repro.kernels.reservoir_rollout.ops import FusedRollout
+from repro.kernels.reservoir_rollout.ref import (rollout_fp32_ref,
+                                                 rollout_int8_ref)
+from repro.kernels.reservoir_step.ops import FusedReservoir
+
+
+def _step_loop(params, u_seq, step):
+    """Reference trajectory: eager per-step function over (T, B, I)."""
+    t, b, _ = u_seq.shape
+    x = jnp.zeros((b, params.config.reservoir_dim), jnp.float32)
+    out = []
+    for i in range(t):
+        x = step(params, x, u_seq[i])
+        out.append(np.asarray(x))
+    return np.stack(out)
+
+
+def _make(dim, mode, leak, seed, block):
+    cfg = ESNConfig(reservoir_dim=dim, element_sparsity=0.8, mode=mode,
+                    leak=leak, seed=seed, block=block)
+    p = init_esn(cfg)
+    kmode = "int8" if mode.startswith("int8") else "fp32"
+    fr = FusedRollout(p.w, np.asarray(p.w_in), leak=leak, mode=kmode,
+                      state_bits=cfg.state_bits)
+    return p, fr
+
+
+class TestFusedRolloutFp32:
+    @pytest.mark.parametrize("dim,block,batch", [
+        (128, 64, 1),
+        (150, 64, 3),      # ragged: padding tile in play
+        (128, 128, 4),
+    ])
+    @pytest.mark.parametrize("leak", [1.0, 0.3])
+    def test_parity_vs_step_ref(self, dim, block, batch, leak):
+        p, fr = _make(dim, "fp32", leak, seed=dim + batch, block=block)
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.standard_normal((6, batch, 1)), jnp.float32)
+        got = np.asarray(fr(u))
+        want = _step_loop(p, u, _step_fp32)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_matches_scan_reference_path(self):
+        p, fr = _make(150, "fp32", 0.3, seed=3, block=64)
+        rng = np.random.default_rng(1)
+        u = jnp.asarray(rng.standard_normal((8, 2, 1)), jnp.float32)
+        got = np.asarray(fr(u))
+        want = np.asarray(run_reservoir(p, u.transpose(1, 0, 2),
+                                        engine="scan")).transpose(1, 0, 2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_given_x0(self):
+        p, fr = _make(96, "fp32", 1.0, seed=5, block=32)
+        rng = np.random.default_rng(2)
+        u = jnp.asarray(rng.standard_normal((4, 2, 1)), jnp.float32)
+        x0 = jnp.asarray(rng.uniform(-0.5, 0.5, (2, 96)), jnp.float32)
+        got = np.asarray(fr(u, x0))
+        x = x0
+        for t in range(4):
+            x = _step_fp32(p, x, u[t])
+        np.testing.assert_allclose(got[-1], np.asarray(x),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_ref_oracle_consistency(self):
+        p, fr = _make(96, "fp32", 0.5, seed=7, block=32)
+        rng = np.random.default_rng(3)
+        u = jnp.asarray(rng.standard_normal((5, 2, 1)), jnp.float32)
+        x0 = jnp.zeros((2, 96), jnp.float32)
+        ref = np.asarray(rollout_fp32_ref(u, p.w.dense_f32(), p.w_in, x0,
+                                          leak=0.5))
+        np.testing.assert_allclose(np.asarray(fr(u)), ref,
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestFusedRolloutInt8:
+    @pytest.mark.parametrize("mode", ["int8-pn", "int8-csd"])
+    @pytest.mark.parametrize("leak", [1.0, 0.3])
+    def test_bit_exact_vs_scan_reference(self, mode, leak):
+        """Acceptance: int8 rollout == jnp scan reference, bit for bit."""
+        p, fr = _make(150, mode, leak, seed=3, block=64)
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.standard_normal((6, 3, 1)), jnp.float32)
+        got = np.asarray(fr(u))
+        want = np.asarray(run_reservoir(p, u.transpose(1, 0, 2),
+                                        engine="scan")).transpose(1, 0, 2)
+        np.testing.assert_array_equal(got, want)
+
+    def test_close_to_eager_step_loop(self):
+        # Eager per-step execution rounds the epilogue differently (no FMA
+        # contraction) — trajectories agree to ~1 ulp per step.
+        p, fr = _make(128, "int8-csd", 0.3, seed=4, block=64)
+        rng = np.random.default_rng(1)
+        u = jnp.asarray(rng.standard_normal((6, 2, 1)), jnp.float32)
+        got = np.asarray(fr(u))
+        want = _step_loop(p, u, _step_int8)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_ref_oracle_consistency(self):
+        p, fr = _make(96, "int8-pn", 1.0, seed=6, block=32)
+        rng = np.random.default_rng(2)
+        u = jnp.asarray(rng.standard_normal((5, 2, 1)), jnp.float32)
+        x0 = jnp.zeros((2, 96), jnp.float32)
+        ref = np.asarray(rollout_int8_ref(u, p.w.q, p.w.scale, p.w_in, x0,
+                                          leak=1.0, state_bits=8))
+        np.testing.assert_allclose(np.asarray(fr(u)), ref,
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestStaticCulling:
+    def _block_structured(self, mode):
+        # Only the top-left 2x2 block grid is populated: 12 of 16 blocks
+        # (and their plan terms) must be culled at trace time.
+        rng = np.random.default_rng(0)
+        dense = np.zeros((256, 256), np.float32)
+        dense[:128, :128] = rng.integers(-8, 8, (128, 128))
+        fm = FixedMatrix.compile(dense, weight_bits=8, mode="csd", block=64,
+                                 rng=rng)
+        w_in = rng.uniform(-0.5, 0.5, (1, 256)).astype(np.float32)
+        return fm, w_in
+
+    @pytest.mark.parametrize("kmode", ["fp32", "int8"])
+    def test_zero_blocks_never_enter_plan(self, kmode):
+        fm, w_in = self._block_structured(kmode)
+        fr = FusedRollout(fm, w_in, mode=kmode)
+        assert fm.blocks.n_blocks_nnz == 4       # 2x2 of 64-blocks
+        rows_used = {ri for terms in fr.col_plan for term in terms
+                     for ri in [term[-1]]}
+        assert rows_used == {0, 1}
+        assert all(not terms for terms in fr.col_plan[2:])
+
+    def test_int8_plane_culling_is_finer_than_blocks(self):
+        # One block at full quantized magnitude, one block whose weights
+        # quantize to +-1: the small block populates only digit plane 0,
+        # so its other plane-blocks must be culled from the plan.
+        rng = np.random.default_rng(1)
+        dense = np.zeros((128, 128), np.float32)
+        dense[:64, :64] = rng.uniform(-1.0, 1.0, (64, 64))
+        dense[0, 0] = 1.0                                  # pins amax
+        dense[64:, 64:] = rng.choice([-1.0, 0.0, 1.0], (64, 64)) / 127.0
+        fm = FixedMatrix.compile(dense, weight_bits=8, mode="pn", block=64,
+                                 rng=rng)
+        w_in = rng.uniform(-0.5, 0.5, (1, 128)).astype(np.float32)
+        fr = FusedRollout(fm, w_in, mode="int8")
+        width = fm.planes.pos.shape[0]
+        assert fr.n_terms < fm.blocks.n_blocks_nnz * width
+        # the +-1 block sits in column block 1 and uses plane 0 only
+        small_di = int(np.flatnonzero((fm.blocks.block_rows == 1)
+                                      & (fm.blocks.block_cols == 1))[0])
+        small_planes = {w for terms in fr.col_plan for (w, di, _ri) in terms
+                        if di == small_di}
+        assert small_planes == {0}
+
+    def test_culled_rollout_still_exact(self):
+        fm, w_in = self._block_structured("int8")
+        fr = FusedRollout(fm, w_in, mode="int8")
+        rng = np.random.default_rng(2)
+        u = jnp.asarray(rng.standard_normal((4, 2, 1)), jnp.float32)
+        got = np.asarray(fr(u))
+        ref = np.asarray(rollout_int8_ref(
+            u, fm.q, fm.scale, jnp.asarray(w_in),
+            jnp.zeros((2, 256), jnp.float32)))
+        np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-6)
+
+
+class TestReservoirStepMultiStep:
+    """Satellite: reservoir_step driven over multi-step rollouts."""
+
+    @pytest.mark.parametrize("leak", [1.0, 0.3])
+    def test_step_scan_matches_step_refs(self, leak):
+        rng = np.random.default_rng(0)
+        dim, batch, t = 128, 3, 8
+        w = (rng.standard_normal((dim, dim)) * 0.05).astype(np.float32)
+        w_in = (rng.standard_normal((2, dim)) * 0.3).astype(np.float32)
+        fr = FusedReservoir(w, w_in, leak=leak, block=64)
+        u = jnp.asarray(rng.standard_normal((t, batch, 2)), jnp.float32)
+        got = np.asarray(fr.run(u))
+        want = np.asarray(rollout_fp32_ref(
+            u, jnp.asarray(w), jnp.asarray(w_in),
+            jnp.zeros((batch, dim), jnp.float32), leak=leak))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_step_and_rollout_kernels_agree(self):
+        cfg = ESNConfig(reservoir_dim=128, element_sparsity=0.8, seed=9,
+                        leak=0.6, block=64)
+        p = init_esn(cfg)
+        fr_step = FusedReservoir(np.asarray(p.w.dense_f32()),
+                                 np.asarray(p.w_in), leak=0.6, block=64)
+        fr_roll = FusedRollout(p.w, np.asarray(p.w_in), leak=0.6)
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.standard_normal((10, 2, 1)), jnp.float32)
+        np.testing.assert_allclose(np.asarray(fr_step.run(u)),
+                                   np.asarray(fr_roll(u)),
+                                   rtol=1e-4, atol=1e-5)
