@@ -120,7 +120,7 @@ def main():
         t_compile = time.perf_counter() - t0
         cost = fm.fpga_cost()
         dense_bytes = table.size * 2
-        plane_bytes = fm.ones / 8 + fm.blocks.n_blocks_nnz * 16
+        plane_bytes = fm.ones / 8 + fm.plan().stats.blocks_nnz * 16
         print(f"\nfrozen-sparse head: compiled in {t_compile:.1f}s — "
               f"{fm.ones} ones, element sparsity {fm.element_sparsity:.2f}")
         print(f"  spatial-model latency {cost.latency_ns:.0f} ns/token; "

@@ -30,7 +30,7 @@ from repro.core import ridge
 from repro.core.sparse import FixedMatrix, random_sparse_matrix
 
 __all__ = ["ESNConfig", "ESNParams", "init_esn", "run_reservoir",
-           "fit_readout", "predict", "nrmse"]
+           "run_readout", "fit_readout", "predict", "nrmse"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,6 +161,30 @@ def run_reservoir(params: ESNParams, inputs: jnp.ndarray,
     eng = engine_for(params) if engine == "auto" else engine_for(
         params, backend=engine)
     return eng.rollout(jnp.asarray(inputs), x0)
+
+
+def run_readout(params: ESNParams, inputs: jnp.ndarray,
+                x0: jnp.ndarray | None = None,
+                engine: str = "auto") -> jnp.ndarray:
+    """Roll the reservoir AND apply the trained readout in one fused pass.
+
+    (T, input_dim) -> (T, output_dim) predictions (batched inputs return
+    (B, T, output_dim)).  ``W_out`` is applied inside the rollout — the
+    scan body on the XLA backend, the Pallas launch epilogue on the TPU
+    backend — so the state trajectory is never materialized; this is the
+    serving path ("serving returns predictions, not states").
+    """
+    if params.w_out is None:
+        raise ValueError("readout not trained; call fit_readout first")
+    if engine == "scan":
+        return predict(params, _run_reservoir_scan(params, inputs, x0))
+    if engine not in ("auto", "xla", "pallas"):
+        raise ValueError(f"unknown engine {engine!r}; expected one of "
+                         "'auto', 'xla', 'pallas', 'scan'")
+    from repro.serve.engine import engine_for  # deferred: serve imports esn
+    eng = engine_for(params) if engine == "auto" else engine_for(
+        params, backend=engine)
+    return eng.predictions(jnp.asarray(inputs), x0)
 
 
 def fit_readout(params: ESNParams, states: jnp.ndarray, targets: jnp.ndarray,

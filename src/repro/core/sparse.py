@@ -170,6 +170,13 @@ class FixedMatrix:
                    q=jnp.asarray(q, dtype=jnp.int8),
                    element_sparsity=float(sparsity))
 
+    # -- downstream lowering --------------------------------------------------
+    def plan(self):
+        """The shared :class:`repro.plan.ExecutionPlan` lowering of this
+        matrix (cached per instance; import deferred to avoid a cycle)."""
+        from repro.plan import plan_for
+        return plan_for(self)
+
     # -- cost reporting -------------------------------------------------------
     @property
     def ones(self) -> int:

@@ -1,45 +1,47 @@
-"""Jitted wrapper: BlockSparse -> sorted/padded tile list -> Pallas BCSR."""
+"""ExecutionPlan -> sorted/padded BCSR tile list -> Pallas kernel.
+
+The tile sort, empty-column padding and gather all live in
+:class:`repro.plan.BcsrLayout`; this wrapper only pads activations and
+dispatches.  It accepts a FixedMatrix / ExecutionPlan (the shared compile
+path) or a bare BlockSparse (standalone block-sparse matmuls).
+"""
 
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
 
-from repro.core.sparse import BlockSparse
+from repro.core.sparse import BlockSparse, FixedMatrix
 from repro.kernels.bcsr_matmul.bcsr_matmul import bcsr_matmul
+from repro.plan import BcsrLayout, ExecutionPlan, plan_for
 
 
 class BcsrMatmul:
-    """Precompiled block-sparse multiplier for one fixed BlockSparse matrix.
+    """Precompiled block-sparse multiplier over one static tile layout."""
 
-    Offline: sort tiles by (col, row) so output tiles accumulate on
-    consecutive grid steps, and pad a zero tile into every empty output
-    column so initialization covers the whole output.
-    """
-
-    def __init__(self, bs: BlockSparse, interpret: bool = True):
-        self.block = bs.block
-        nbr, nbc = bs.mask.shape
-        self.rows_pad = nbr * bs.block
-        self.cols_pad = nbc * bs.block
-        self.shape = bs.shape
+    def __init__(self,
+                 source: FixedMatrix | ExecutionPlan | BlockSparse | BcsrLayout,
+                 interpret: bool = True):
+        if isinstance(source, BcsrLayout):
+            layout = source
+        elif isinstance(source, ExecutionPlan):
+            layout = source.bcsr
+        elif isinstance(source, FixedMatrix):
+            layout = plan_for(source).bcsr
+        else:
+            layout = BcsrLayout.from_blocks(source)
+        self.layout = layout
         self.interpret = interpret
 
-        data = np.asarray(bs.data)
-        cols = bs.block_cols.astype(np.int32)
-        rows = bs.block_rows.astype(np.int32)
-        # pad empty output columns with a zero tile
-        missing = sorted(set(range(nbc)) - set(cols.tolist()))
-        if missing:
-            zero = np.zeros((len(missing), bs.block, bs.block), data.dtype)
-            data = np.concatenate([data, zero], axis=0) if data.size else zero
-            cols = np.concatenate([cols, np.asarray(missing, np.int32)])
-            rows = np.concatenate([rows, np.zeros(len(missing), np.int32)])
-        order = np.lexsort((rows, cols))  # sort by col, then row
-        self.data = jnp.asarray(data[order])
-        self.cols = jnp.asarray(cols[order])
-        self.rows = jnp.asarray(rows[order])
-        self.n_tiles = int(self.data.shape[0])
+    # Everything static lives on the layout; expose the public surface
+    # as read-only views instead of mirrored copies.
+    block = property(lambda self: self.layout.block)
+    shape = property(lambda self: self.layout.shape)
+    rows_pad = property(lambda self: self.layout.rows_pad)
+    cols_pad = property(lambda self: self.layout.cols_pad)
+    data = property(lambda self: self.layout.data)
+    cols = property(lambda self: self.layout.cols)
+    rows = property(lambda self: self.layout.rows)
+    n_tiles = property(lambda self: self.layout.n_tiles)
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         b, r = x.shape

@@ -1,4 +1,9 @@
-"""Jitted wrapper: FixedMatrix -> padded digit planes -> Pallas gemv."""
+"""ExecutionPlan -> padded digit planes -> Pallas gemv.
+
+The digit decomposition, MXU padding and whole-plane cull mask all come
+from the shared :mod:`repro.plan` lowering; this wrapper only pads the
+activations and dispatches.
+"""
 
 from __future__ import annotations
 
@@ -7,40 +12,33 @@ import jax.numpy as jnp
 
 from repro.core.sparse import FixedMatrix
 from repro.kernels.bitplane_gemv.bitplane_gemv import bitplane_gemv
+from repro.plan import ExecutionPlan, plan_for
 
 
 def digits_from_fixed(fm: FixedMatrix) -> np.ndarray:
-    """Signed digit planes (W, R, C) int8 from a compiled FixedMatrix."""
-    return (fm.planes.pos.astype(np.int8) - fm.planes.neg.astype(np.int8))
-
-
-def _pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return np.pad(x, widths)
+    """Signed digit planes (W, R, C) int8 via the shared ExecutionPlan."""
+    return plan_for(fm).digits
 
 
 class BitplaneGemv:
     """Precompiled digit-plane multiplier for one fixed matrix.
 
-    Offline (init): pad planes to MXU-aligned blocks, compute the per-plane
-    cull mask.  Online (``__call__``): one Pallas call, exact int32 result.
+    Offline (init): pull the MXU-padded planes and the per-plane cull mask
+    from the ExecutionPlan.  Online (``__call__``): one Pallas call, exact
+    int32 result.
     """
 
-    def __init__(self, fm: FixedMatrix, block_r: int = 128, block_c: int = 128,
+    def __init__(self, source: FixedMatrix | ExecutionPlan,
+                 block_r: int = 128, block_c: int = 128,
                  interpret: bool = True):
-        dig = digits_from_fixed(fm)                     # (W, R, C)
-        dig = _pad_to(_pad_to(dig, 1, block_r), 2, block_c)
-        self.digits = jnp.asarray(dig)
-        self.rows, self.cols = fm.shape
+        plan = source if isinstance(source, ExecutionPlan) else plan_for(source)
+        self.plan = plan
+        self.digits = plan.padded_digits(block_r, block_c)
+        self.rows, self.cols = plan.shape
         self.block_r, self.block_c = block_r, block_c
         self.interpret = interpret
         # Whole-plane culling: CSD often leaves high planes empty.
-        self.plane_mask = tuple(bool(np.any(dig[w])) for w in range(dig.shape[0]))
+        self.plane_mask = plan.plane_mask
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         """x: (B, rows) integer -> (B, cols) int32 exact."""

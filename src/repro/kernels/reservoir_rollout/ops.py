@@ -1,8 +1,10 @@
-"""Offline "compile" step: FixedMatrix -> static rollout plan -> Pallas call.
+"""ExecutionPlan -> Pallas rollout launch.
 
-Mirrors the paper's flow: the reservoir matrix is frozen, so the reduction
-structure (which blocks exist, which digit planes are populated) is decided
-once here, offline, and baked into the kernel as trace-time constants.
+The offline lowering lives in :mod:`repro.plan`: the reservoir matrix is
+frozen, so the reduction structure (which blocks exist, which digit
+plane-blocks are populated, how the columns band into VMEM) is compiled
+once there and consumed here as trace-time constants.  This wrapper only
+pads the per-instance operands (w_in, w_out, x0) and dispatches.
 """
 
 from __future__ import annotations
@@ -12,91 +14,85 @@ import numpy as np
 
 from repro.core.sparse import FixedMatrix
 from repro.kernels.reservoir_rollout.reservoir_rollout import reservoir_rollout
-
-
-def _pad_axis(a: np.ndarray, axis: int, size: int) -> np.ndarray:
-    pad = size - a.shape[axis]
-    if pad == 0:
-        return a
-    widths = [(0, 0)] * a.ndim
-    widths[axis] = (0, pad)
-    return np.pad(a, widths)
+from repro.plan import DEFAULT_VMEM_BUDGET, ExecutionPlan, plan_for
+from repro.plan.plan import pad_axis
 
 
 class FusedRollout:
     """Precompiled fused multi-step rollout for one frozen reservoir.
 
-    Offline (init): gather the nonzero tiles (fp32) or the per-plane digit
-    tiles (int8) of the FixedMatrix, and build the static per-column
-    reduction plan the kernel unrolls.  Online (``__call__``): one Pallas
-    launch rolls the whole (T, B) workload, state resident in VMEM.
+    Offline (init): take the shared :class:`~repro.plan.ExecutionPlan`
+    (building it if handed a raw FixedMatrix) and pick the banded rollout
+    layout for the requested mode and VMEM budget.  Online (``__call__``):
+    one Pallas launch rolls the whole (T, B) workload, state resident in
+    VMEM, streaming one band of weight tiles per grid step.
+
+    With ``w_out`` attached, the readout is fused into the launch epilogue
+    and ``__call__`` can return predictions instead of (or alongside) the
+    state trajectory.
     """
 
-    def __init__(self, fm: FixedMatrix, w_in, *, leak: float = 1.0,
-                 mode: str = "fp32", state_bits: int = 8,
-                 interpret: bool = True):
-        assert fm.shape[0] == fm.shape[1], "reservoir matrix must be square"
+    def __init__(self, source: FixedMatrix | ExecutionPlan, w_in, *,
+                 leak: float = 1.0, mode: str = "fp32", state_bits: int = 8,
+                 interpret: bool = True, w_out=None,
+                 vmem_budget: int | None = DEFAULT_VMEM_BUDGET,
+                 readout_every: int = 1):
+        plan = source if isinstance(source, ExecutionPlan) else plan_for(source)
+        assert plan.shape[0] == plan.shape[1], "reservoir matrix must be square"
         assert mode in ("fp32", "int8"), mode
-        bk = fm.blocks.block
-        nbr, nbc = fm.blocks.mask.shape
-        assert nbr == nbc
-        self.dim = fm.shape[0]
-        self.block = bk
-        self.rpad = nbc * bk
+        assert plan.nbr == plan.nbc
+        self.plan = plan
+        self.layout = plan.rollout_layout(mode, vmem_budget=vmem_budget)
+        self.dim = plan.shape[0]
+        self.block = plan.block
+        self.rpad = plan.cols_pad
         self.leak = float(leak)
         self.mode = mode
         self.interpret = interpret
+        self.readout_every = int(readout_every)
         self.smax = (1 << (state_bits - 1)) - 1
-        self.recur_scale = fm.scale / self.smax
-
-        cols = fm.blocks.block_cols
-        rows = fm.blocks.block_rows
-        if mode == "fp32":
-            data = np.asarray(fm.blocks.data, np.float32)
-            # Per output column, terms in ascending row order — the same
-            # accumulation order as BlockSparse.matmul_ref, so the fused
-            # kernel is bit-compatible with the reference path.
-            plan = tuple(
-                tuple((int(di), int(rows[di]))
-                      for di in np.flatnonzero(cols == ci))
-                for ci in range(nbc))
-            if data.shape[0] == 0:  # all-zero reservoir: ship one dummy tile
-                data = np.zeros((1, bk, bk), np.float32)
-        else:
-            dig = (fm.planes.pos.astype(np.int8)
-                   - fm.planes.neg.astype(np.int8))          # (W, R, C)
-            width = dig.shape[0]
-            dig = _pad_axis(_pad_axis(dig, 1, nbr * bk), 2, nbc * bk)
-            tiles = dig.reshape(width, nbr, bk, nbc, bk).transpose(0, 1, 3, 2, 4)
-            data = tiles[:, rows, cols]                      # (W, n_nnz, bk, bk)
-            # Plane-level culling on top of block-level culling: a plan term
-            # exists only where that plane of that block has any set digit.
-            plan = tuple(
-                tuple((w, int(di), int(rows[di]))
-                      for di in np.flatnonzero(cols == ci)
-                      for w in range(width)
-                      if np.any(data[w, di]))
-                for ci in range(nbc))
-            if data.shape[1] == 0:
-                data = np.zeros((width, 1, bk, bk), np.int8)
-        self.w_data = jnp.asarray(data)
-        self.col_plan = plan
-        self.n_terms = sum(len(p) for p in plan)
+        self.recur_scale = plan.scale / self.smax
+        self.n_terms = self.layout.n_terms
         self.w_in = jnp.asarray(
-            _pad_axis(np.asarray(w_in, np.float32), 1, self.rpad))
+            pad_axis(np.asarray(w_in, np.float32), 1, self.rpad))
+        self.w_out = None
+        self.out_dim = 0
+        if w_out is not None:
+            wo = np.asarray(w_out, np.float32)
+            assert wo.shape[0] == self.dim, wo.shape
+            self.out_dim = wo.shape[1]
+            opad = -(-self.out_dim // 128) * 128
+            self.w_out = jnp.asarray(
+                pad_axis(pad_axis(wo, 0, self.rpad), 1, opad))
 
-    def __call__(self, u_seq: jnp.ndarray,
-                 x0: jnp.ndarray | None = None) -> jnp.ndarray:
-        """u_seq: (T, B, I) -> states (T, B, dim)."""
+    @property
+    def n_bands(self) -> int:
+        return self.layout.n_bands
+
+    def __call__(self, u_seq: jnp.ndarray, x0: jnp.ndarray | None = None, *,
+                 return_states: bool = True, return_preds: bool = False):
+        """u_seq: (T, B, I) -> states (T, B, dim), preds
+        (T // readout_every, B, out_dim), or (states, preds)."""
+        assert return_states or return_preds
+        assert not return_preds or self.w_out is not None, \
+            "fused readout requested but no w_out attached"
         t, b, _ = u_seq.shape
         if x0 is None:
             x0 = jnp.zeros((b, self.rpad), jnp.float32)
         else:
             x0 = jnp.asarray(x0, jnp.float32)
             x0 = jnp.pad(x0, ((0, 0), (0, self.rpad - x0.shape[1])))
-        states = reservoir_rollout(
-            u_seq.astype(jnp.float32), self.w_data, self.w_in, x0,
-            col_plan=self.col_plan, leak=self.leak, block=self.block,
-            mode=self.mode, smax=self.smax, recur_scale=self.recur_scale,
+        out = reservoir_rollout(
+            u_seq.astype(jnp.float32), self.layout.data, self.w_in, x0,
+            self.w_out if return_preds else None,
+            band_plans=self.layout.band_plans(), leak=self.leak,
+            block=self.block, mode=self.mode, smax=self.smax,
+            recur_scale=self.recur_scale, readout_every=self.readout_every,
+            want_states=return_states, want_preds=return_preds,
             interpret=self.interpret)
-        return states[:, :, : self.dim]
+        if return_states and return_preds:
+            states, preds = out
+            return states[:, :, : self.dim], preds[:, :, : self.out_dim]
+        if return_preds:
+            return out[:, :, : self.out_dim]
+        return out[:, :, : self.dim]

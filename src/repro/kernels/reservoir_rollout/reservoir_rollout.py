@@ -1,27 +1,31 @@
-"""Pallas TPU kernel: fused batched reservoir rollout.
+"""Pallas TPU kernel: fused batched reservoir rollout (banded, fused readout).
 
 T steps of paper Eq. 1 for a whole state batch in ONE kernel launch:
 
     x(n) = (1 - leak) * x(n-1) + leak * f(u(n) @ W_in + x(n-1) @ W)
+    y(n) = x(n) @ W_out                                       (optional, Eq. 2)
 
-The grid is ``(T,)`` — TPU grids execute sequentially, so a VMEM scratch
-buffer carries the state batch across steps without ever round-tripping to
-HBM.  This extends ``reservoir_step.py`` (which fuses the two matmuls and
-the leak/tanh epilogue of a *single* step) to the full recurrent loop the
-paper specializes: the input projection joins each step's accumulation and
-the epilogue fires per output column tile.
+The grid is ``(T, n_bands)`` — TPU grids execute sequentially, so VMEM
+scratch carries the state batch across steps while each inner grid step
+streams exactly ONE band's weight tiles into VMEM.  Bands come from the
+:class:`repro.plan.ExecutionPlan` lowering: output column blocks are packed
+into bands whose tiles fit the VMEM budget, which is what lets dim-2048
+fp32 rollouts compile instead of overflowing scratch.  With one band this
+degenerates to the original whole-matrix-resident kernel.
 
-The recurrent reduction is driven by a *static* per-column plan derived
-from :class:`repro.core.sparse.FixedMatrix`'s BCSR mask: the Python loop
-over nonzero blocks unrolls at trace time, so zero blocks cost nothing —
-the MXU analogue of the paper's synthesis-time adder culling.  Two modes:
+The reduction is driven by the plan's *static* per-band term lists — the
+Python loops unroll at trace time, so culled blocks (and, in int8 mode,
+culled digit plane-blocks) cost nothing: the MXU analogue of the paper's
+synthesis-time adder culling.  Two modes share one kernel body:
 
-* ``fp32``  — dequantized block data, bit-compatible with
-  ``BlockSparse.matmul_ref`` accumulation order.
-* ``int8``  — exact digit-plane arithmetic (paper [16]): the state batch is
-  requantized every step, the recurrent product runs as shifted int32
-  plane-block dots (plan entries carry the plane index, so empty
-  plane-blocks are culled too), then is rescaled for the activation.
+* ``fp32``  — dequantized tiles, bit-compatible with
+  ``BlockSparse.matmul_ref`` accumulation order (shift is 0 and unused).
+* ``int8``  — exact digit-plane arithmetic: the state batch is requantized
+  every step and each term is a shifted int32 plane-tile dot.
+
+The optional fused readout applies ``W_out`` to the new state inside the
+launch (at every step, or every ``readout_every`` steps), so serving can
+return predictions without ever materializing the state trajectory in HBM.
 """
 
 from __future__ import annotations
@@ -34,117 +38,169 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _rollout_fp32_kernel(u_ref, w_ref, win_ref, x0_ref, o_ref, x_ref, *,
-                         col_plan, leak: float, block: int):
-    t = pl.program_id(0)
+def _rollout_kernel(*refs, band_plans, leak, block, mode, smax, recur_scale,
+                    n_bands, readout_every, want_states, want_preds):
+    if want_preds:
+        u_ref, w_ref, win_ref, wout_ref, x0_ref, *rest = refs
+    else:
+        u_ref, w_ref, win_ref, x0_ref, *rest = refs
+        wout_ref = None
+    o_ref = rest.pop(0) if want_states else None
+    y_ref = rest.pop(0) if want_preds else None
+    x_ref, nx_ref = rest
 
-    @pl.when(t == 0)
+    t = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when((t == 0) & (k == 0))
     def _load_initial_state():
         x_ref[...] = x0_ref[...]
 
     x = x_ref[...]
     u = u_ref[0]
-    for ci, terms in enumerate(col_plan):
-        sl = slice(ci * block, (ci + 1) * block)
-        acc = None
-        for di, ri in terms:
-            xs = x[:, ri * block:(ri + 1) * block]
-            contrib = xs @ w_ref[di]
-            acc = contrib if acc is None else acc + contrib
-        pre = u @ win_ref[:, sl]
-        if acc is not None:
-            pre = pre + acc
-        o_ref[0, :, sl] = (1.0 - leak) * x[:, sl] + leak * jnp.tanh(pre)
-    x_ref[...] = o_ref[0]
-
-
-def _rollout_int8_kernel(u_ref, dig_ref, win_ref, x0_ref, o_ref, x_ref, *,
-                         col_plan, leak: float, block: int, smax: int,
-                         recur_scale: float):
-    t = pl.program_id(0)
-
-    @pl.when(t == 0)
-    def _load_initial_state():
-        x_ref[...] = x0_ref[...]
-
-    x = x_ref[...]
-    # Per-step state requantization, exactly as esn._step_int8 does it.
-    xq = jnp.clip(jnp.round(x * smax), -smax - 1, smax).astype(jnp.int32)
-    u = u_ref[0]
+    if mode == "int8":
+        # Per-step state requantization, exactly as esn._step_int8 does it.
+        xq = jnp.clip(jnp.round(x * smax), -smax - 1, smax).astype(jnp.int32)
     b = x.shape[0]
-    for ci, terms in enumerate(col_plan):
-        sl = slice(ci * block, (ci + 1) * block)
-        acc = jnp.zeros((b, block), jnp.int32)
-        for w, di, ri in terms:
-            xs = xq[:, ri * block:(ri + 1) * block]
-            acc = acc + ((xs @ dig_ref[w, di].astype(jnp.int32)) << w)
-        recur = acc.astype(jnp.float32) * recur_scale
-        pre = u @ win_ref[:, sl] + recur
-        o_ref[0, :, sl] = (1.0 - leak) * x[:, sl] + leak * jnp.tanh(pre)
-    x_ref[...] = o_ref[0]
+
+    for bi, cols in enumerate(band_plans):
+        @pl.when(k == bi)
+        def _run_band(cols=cols):
+            # w_ref holds band bi's tiles exactly when k == bi (BlockSpec).
+            for ci, terms in cols:
+                sl = slice(ci * block, (ci + 1) * block)
+                if mode == "fp32":
+                    acc = None
+                    for slot, _shift, ri in terms:
+                        xs = x[:, ri * block:(ri + 1) * block]
+                        contrib = xs @ w_ref[0, slot]
+                        acc = contrib if acc is None else acc + contrib
+                    pre = u @ win_ref[:, sl]
+                    if acc is not None:
+                        pre = pre + acc
+                else:
+                    acc = jnp.zeros((b, block), jnp.int32)
+                    for slot, shift, ri in terms:
+                        xs = xq[:, ri * block:(ri + 1) * block]
+                        acc = acc + (
+                            (xs @ w_ref[0, slot].astype(jnp.int32)) << shift)
+                    recur = acc.astype(jnp.float32) * recur_scale
+                    pre = u @ win_ref[:, sl] + recur
+                nx_ref[:, sl] = (1.0 - leak) * x[:, sl] + leak * jnp.tanh(pre)
+
+    @pl.when(k == n_bands - 1)
+    def _commit_step():
+        nx = nx_ref[...]
+        x_ref[...] = nx
+        if want_states:
+            o_ref[0] = nx
+        if want_preds:
+            if readout_every == 1:
+                y_ref[0] = nx @ wout_ref[...]
+            else:
+                @pl.when((t + 1) % readout_every == 0)
+                def _emit_readout():
+                    y_ref[0] = nx @ wout_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "col_plan", "leak", "block", "mode", "smax", "recur_scale", "interpret"))
+    "band_plans", "leak", "block", "mode", "smax", "recur_scale",
+    "readout_every", "want_states", "want_preds", "interpret"))
 def reservoir_rollout(
     u_seq: jnp.ndarray,
     w_data: jnp.ndarray,
     w_in: jnp.ndarray,
     x0: jnp.ndarray,
+    w_out: jnp.ndarray | None = None,
     *,
-    col_plan: tuple,
+    band_plans: tuple,
     leak: float = 1.0,
     block: int = 128,
     mode: str = "fp32",
     smax: int = 127,
     recur_scale: float = 1.0,
+    readout_every: int = 1,
+    want_states: bool = True,
+    want_preds: bool = False,
     interpret: bool = True,
-) -> jnp.ndarray:
-    """Fused T-step rollout for a state batch.
+):
+    """Fused T-step rollout for a state batch, optionally banded + readout.
 
     Args:
         u_seq: (T, B, I) inputs, float32.
-        w_data: fp32 mode — (n_nnz, block, block) float32 nonzero tiles of
-            the reservoir matrix; int8 mode — (width, n_nnz, block, block)
-            int8 signed digit planes gathered over the same tile list.
+        w_data: (n_bands, max_terms, block, block) banded weight tiles from
+            ``ExecutionPlan.rollout_layout`` — float32 dequantized tiles
+            (fp32 mode) or int8 digit-plane tiles (int8 mode).
         w_in: (I, R) input weights, R padded to a multiple of ``block``.
         x0: (B, R) initial states.
-        col_plan: static nested tuple; entry ``ci`` lists the reduction
-            terms for output column block ``ci`` — fp32: ``(data_idx,
-            row_block)`` pairs; int8: ``(plane, data_idx, row_block)``
-            triples.  Zero blocks (and empty plane-blocks) simply never
-            appear, so they are culled at trace time.
+        w_out: (R, O) readout weights (required iff ``want_preds``), O
+            padded to a lane multiple.
+        band_plans: static nested tuple, one entry per band; each entry
+            lists ``(ci, ((slot, shift, row_block), ...))`` per output
+            column block.  Culled blocks/plane-blocks never appear.
         leak: leak rate of Eq. 1.
         mode: "fp32" or "int8".
         smax / recur_scale: int8-mode state quantization range and the
             ``scale / smax`` factor restoring float pre-activations.
+        readout_every: emit predictions every k steps (k must divide T).
+        want_states / want_preds: which outputs to materialize; dropping
+            states keeps the trajectory entirely in VMEM.
 
     Returns:
-        (T, B, R) state trajectory, float32.
+        states (T, B, R), preds (T // readout_every, B, O), or the tuple
+        (states, preds) — whichever of ``want_states`` / ``want_preds``
+        asks for both.
     """
     t, b, i = u_seq.shape
     r = x0.shape[1]
+    n_bands, max_terms = w_data.shape[:2]
     assert r % block == 0 and w_in.shape == (i, r), (u_seq.shape, w_in.shape)
-    assert len(col_plan) == r // block
-    if mode == "int8":
-        kernel = functools.partial(
-            _rollout_int8_kernel, col_plan=col_plan, leak=leak, block=block,
-            smax=smax, recur_scale=recur_scale)
-    else:
-        kernel = functools.partial(
-            _rollout_fp32_kernel, col_plan=col_plan, leak=leak, block=block)
-    return pl.pallas_call(
+    assert len(band_plans) == n_bands
+    assert want_states or want_preds
+    if want_preds:
+        assert w_out is not None and w_out.shape[0] == r, w_out
+        assert t % readout_every == 0, (t, readout_every)
+        o = w_out.shape[1]
+
+    kernel = functools.partial(
+        _rollout_kernel, band_plans=band_plans, leak=leak, block=block,
+        mode=mode, smax=smax, recur_scale=recur_scale, n_bands=n_bands,
+        readout_every=readout_every, want_states=want_states,
+        want_preds=want_preds)
+
+    in_specs = [
+        pl.BlockSpec((1, b, i), lambda ti, ki: (ti, 0, 0)),        # u(t)
+        pl.BlockSpec((1, max_terms, block, block),
+                     lambda ti, ki: (ki, 0, 0, 0)),                # band tiles
+        pl.BlockSpec((i, r), lambda ti, ki: (0, 0)),               # w_in
+    ]
+    operands = [u_seq, w_data, w_in]
+    if want_preds:
+        in_specs.append(pl.BlockSpec((r, o), lambda ti, ki: (0, 0)))
+        operands.append(w_out)
+    in_specs.append(pl.BlockSpec((b, r), lambda ti, ki: (0, 0)))   # x0
+    operands.append(x0)
+
+    out_shapes, out_specs = [], []
+    if want_states:
+        out_shapes.append(jax.ShapeDtypeStruct((t, b, r), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, b, r), lambda ti, ki: (ti, 0, 0)))
+    if want_preds:
+        out_shapes.append(jax.ShapeDtypeStruct(
+            (t // readout_every, b, o), jnp.float32))
+        out_specs.append(pl.BlockSpec(
+            (1, b, o),
+            lambda ti, ki, _k=readout_every: (ti // _k, 0, 0)))
+
+    single = len(out_shapes) == 1
+    out = pl.pallas_call(
         kernel,
-        out_shape=jax.ShapeDtypeStruct((t, b, r), jnp.float32),
-        grid=(t,),
-        in_specs=[
-            pl.BlockSpec((1, b, i), lambda ti: (ti, 0, 0)),          # u(t)
-            pl.BlockSpec(w_data.shape,
-                         lambda ti, _n=w_data.ndim: (0,) * _n),      # tiles
-            pl.BlockSpec((i, r), lambda ti: (0, 0)),                 # w_in
-            pl.BlockSpec((b, r), lambda ti: (0, 0)),                 # x0
-        ],
-        out_specs=pl.BlockSpec((1, b, r), lambda ti: (ti, 0, 0)),
-        scratch_shapes=[pltpu.VMEM((b, r), jnp.float32)],            # state
+        out_shape=out_shapes[0] if single else tuple(out_shapes),
+        grid=(t, n_bands),
+        in_specs=in_specs,
+        out_specs=out_specs[0] if single else tuple(out_specs),
+        scratch_shapes=[pltpu.VMEM((b, r), jnp.float32),           # state
+                        pltpu.VMEM((b, r), jnp.float32)],          # next state
         interpret=interpret,
-    )(u_seq, w_data, w_in, x0)
+    )(*operands)
+    return out

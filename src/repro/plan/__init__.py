@@ -1,0 +1,29 @@
+"""Unified matrix -> ExecutionPlan compiler (the paper's synthesis step).
+
+One offline lowering of a :class:`repro.core.sparse.FixedMatrix` produces
+every static artifact the kernels, the serve engine and the cost reports
+consume: gathered nonzero tiles, per-column reduction term lists (with
+block- and plane-level culling), whole-plane masks, VMEM-banded rollout
+layouts, the sorted BCSR tile list, and the FPGA cost model attached to
+the exact decomposed structure.
+"""
+
+from repro.plan.plan import (
+    DEFAULT_VMEM_BUDGET,
+    BandedRollout,
+    BcsrLayout,
+    ExecutionPlan,
+    PlanStats,
+    RolloutBand,
+    plan_for,
+)
+
+__all__ = [
+    "DEFAULT_VMEM_BUDGET",
+    "BandedRollout",
+    "BcsrLayout",
+    "ExecutionPlan",
+    "PlanStats",
+    "RolloutBand",
+    "plan_for",
+]

@@ -3,20 +3,24 @@
 The paper's win is specializing the *recurrent* multiply of a frozen
 reservoir; serving-side, the unit of work is therefore the whole rollout
 ``x(n) = f(W_in u(n) + W x(n-1))`` over a request batch, not a single gemv.
-The engine fronts two fused implementations behind one interface:
+Every backend builds from the one shared :class:`repro.plan.ExecutionPlan`
+lowering of the reservoir matrix (the TPU analogue of the paper's
+compile-to-bitstream step) and fronts two fused implementations:
 
 * ``xla``    — a jitted ``lax.scan`` whose body does the *batched*
-  recurrent multiply natively (one (B, R) x (R, R) product per step, dense
-  or block-culled depending on the compiled matrix's block density) with
-  the input projection hoisted into a single (B*T, I) x (I, R) gemm before
-  the scan.  This is the fast path on CPU/GPU backends.
-* ``pallas`` — the ``reservoir_rollout`` Pallas kernel: T steps fused in
-  one launch, state resident in VMEM, zero blocks culled at trace time.
-  This is the TPU path (``interpret=True`` elsewhere).
+  recurrent multiply natively (dense or block-culled, dispatched on the
+  plan's block density) with the input projection hoisted into a single
+  (B*T, I) x (I, R) gemm before the scan.  The fast path on CPU/GPU.
+* ``pallas`` — the ``reservoir_rollout`` Pallas kernel fed by the plan's
+  VMEM-banded layout: T steps fused in one launch, state resident in VMEM,
+  one band of weight tiles streamed per grid step.  The TPU path
+  (``interpret=True`` elsewhere).
 
-Both preserve the per-step state requantization of the int8 digit-plane
-mode exactly.  ``run_reservoir`` dispatches here by default; the legacy
-per-step scan survives as ``engine="scan"`` and is the benchmark baseline.
+With a trained readout the engine serves *predictions*: ``W_out`` is fused
+into the rollout epilogue (per-step ``y = x @ W_out`` inside the scan body
+/ Pallas launch), so the state trajectory is never materialized on the
+prediction path.  ``serve(..., return_states=True)`` keeps the old
+states contract.
 """
 
 from __future__ import annotations
@@ -29,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core.esn import ESNParams
 from repro.kernels.reservoir_rollout.ops import FusedRollout
+from repro.plan import DEFAULT_VMEM_BUDGET, plan_for
 from repro.serve.batching import MicroBatch, PaddingBucketer, RolloutRequest
 from repro.serve.stats import ServeStats
 
@@ -41,34 +46,45 @@ DENSE_DISPATCH_DENSITY = 0.5
 
 
 class ReservoirEngine:
-    """Fused batched rollout for one frozen ESN."""
+    """Fused batched rollout (and readout) for one frozen ESN."""
 
     def __init__(self, params: ESNParams, *, backend: str = "auto",
                  interpret: bool = True, stats: ServeStats | None = None,
-                 dense_dispatch_density: float = DENSE_DISPATCH_DENSITY):
+                 dense_dispatch_density: float = DENSE_DISPATCH_DENSITY,
+                 vmem_budget: int | None = DEFAULT_VMEM_BUDGET):
         assert backend in ("auto", "xla", "pallas"), backend
         self.params = params
         self.config = params.config
         self.backend = "xla" if backend == "auto" else backend
         self.stats = stats if stats is not None else ServeStats()
+        self.plan = plan_for(params.w)
+        self.vmem_budget = vmem_budget
         self._int8 = self.config.mode.startswith("int8")
+        # Readout captured at construction; engine_for invalidates the
+        # cached engine when params.w_out is replaced (fit_readout).
+        self._w_out = params.w_out
+        # plan.block_density (not plan.stats) keeps the fp32 path from
+        # paying for the integer lowering just to make a dispatch decision
         self.uses_dense = (not self._int8 and
-                           params.w.blocks.density >= dense_dispatch_density)
+                           self.plan.block_density >= dense_dispatch_density)
         if self.backend == "pallas":
             self._fused = FusedRollout(
-                params.w, params.w_in, leak=self.config.leak,
+                self.plan, params.w_in, leak=self.config.leak,
                 mode="int8" if self._int8 else "fp32",
-                state_bits=self.config.state_bits, interpret=interpret)
+                state_bits=self.config.state_bits, interpret=interpret,
+                w_out=self._w_out, vmem_budget=vmem_budget)
         else:
-            self._xla_fn = self._build_xla_fn()
+            self._xla_fn = self._build_xla_fn(with_readout=False)
+            self._xla_pred_fn = None  # built lazily on first predictions()
 
     # -- fused XLA rollout ---------------------------------------------------
-    def _build_xla_fn(self):
+    def _build_xla_fn(self, with_readout: bool):
         params, cfg = self.params, self.config
         w, w_in = params.w, params.w_in
         int8 = self._int8
         leak = cfg.leak
         smax = (1 << (cfg.state_bits - 1)) - 1
+        w_out = jnp.asarray(self._w_out, jnp.float32) if with_readout else None
         # The engine may be constructed lazily inside someone else's jit
         # trace (run_reservoir under jax.jit); the dense closure constant
         # must be materialized eagerly or it leaks that trace.
@@ -95,20 +111,23 @@ class ReservoirEngine:
                 return nxt, nxt
 
             _, states = jax.lax.scan(body, x0, uproj_t)
-            return jnp.swapaxes(states, 0, 1)                # (B, T, R)
+            out = jnp.swapaxes(states, 0, 1)                 # (B, T, R)
+            if with_readout:
+                # Fused readout: W_out applied inside the same compiled
+                # program — one dispatch, predictions only leave the device,
+                # and the result is the exact predict(states) contraction.
+                return out @ w_out                           # (B, T, O)
+            return out
 
         return jax.jit(rollout)
 
     # -- public API ----------------------------------------------------------
-    def rollout(self, inputs: jnp.ndarray,
-                x0: jnp.ndarray | None = None,
-                real_steps: int | None = None) -> jnp.ndarray:
-        """Roll the reservoir: (T, I) -> (T, R) or (B, T, I) -> (B, T, R)."""
+    def _prepare(self, inputs, x0):
         u = jnp.asarray(inputs)
         single = u.ndim == 2
         if single:
             u = u[None]
-        b, t, _ = u.shape
+        b = u.shape[0]
         dim = self.config.reservoir_dim
         if x0 is None:
             x0b = jnp.zeros((b, dim), jnp.float32)
@@ -116,37 +135,79 @@ class ReservoirEngine:
             x0b = jnp.asarray(x0, jnp.float32)
             if x0b.ndim == 1:
                 x0b = jnp.broadcast_to(x0b, (b, dim))
+        return u, x0b, single
+
+    def _record(self, out, batch, steps, t0, real_steps):
         # Under an outer jit/vmap/grad trace the inputs are tracers: still
         # composable (the jitted fn nests), but timing/stats are meaningless
         # there — skip them instead of calling block_until_ready on a tracer.
-        tracing = isinstance(u, jax.core.Tracer)
+        if not isinstance(out, jax.core.Tracer):
+            out.block_until_ready()
+            self.stats.record_call(batch=batch, steps=steps,
+                                   seconds=time.perf_counter() - t0,
+                                   real_steps=real_steps)
+        return out
+
+    def rollout(self, inputs: jnp.ndarray,
+                x0: jnp.ndarray | None = None,
+                real_steps: int | None = None) -> jnp.ndarray:
+        """Roll the reservoir: (T, I) -> (T, R) or (B, T, I) -> (B, T, R)."""
+        u, x0b, single = self._prepare(inputs, x0)
+        b, t, _ = u.shape
         t0 = time.perf_counter()
         if self.backend == "pallas":
             states = self._fused(jnp.swapaxes(u, 0, 1), x0b)
             states = jnp.swapaxes(states, 0, 1)
         else:
             states = self._xla_fn(u, x0b)
-        if not tracing:
-            states.block_until_ready()
-            self.stats.record_call(batch=b, steps=t,
-                                   seconds=time.perf_counter() - t0,
-                                   real_steps=real_steps)
+        self._record(states, b, t, t0, real_steps)
         return states[0] if single else states
 
+    def predictions(self, inputs: jnp.ndarray,
+                    x0: jnp.ndarray | None = None,
+                    real_steps: int | None = None) -> jnp.ndarray:
+        """Fused-readout rollout: (B, T, I) -> (B, T, O) predictions.
+
+        ``W_out`` is applied inside the rollout (scan body / Pallas
+        epilogue), so the (B, T, R) state trajectory is never materialized.
+        """
+        if self._w_out is None:
+            raise ValueError("readout not trained; call fit_readout first "
+                             "(or serve with return_states=True)")
+        u, x0b, single = self._prepare(inputs, x0)
+        b, t, _ = u.shape
+        t0 = time.perf_counter()
+        if self.backend == "pallas":
+            preds = self._fused(jnp.swapaxes(u, 0, 1), x0b,
+                                return_states=False, return_preds=True)
+            preds = jnp.swapaxes(preds, 0, 1)
+        else:
+            if self._xla_pred_fn is None:
+                self._xla_pred_fn = self._build_xla_fn(with_readout=True)
+            preds = self._xla_pred_fn(u, x0b)
+        self._record(preds, b, t, t0, real_steps)
+        return preds[0] if single else preds
+
     def serve(self, requests: Sequence[RolloutRequest],
-              bucketer: PaddingBucketer | None = None) -> dict:
+              bucketer: PaddingBucketer | None = None,
+              return_states: bool | None = None) -> dict:
         """Batch, pad and roll a set of variable-length requests.
 
-        Returns {uid: (T_request, R) states}, each sliced back to its real
-        length.  Padding overhead lands in ``self.stats``.
+        With a trained readout (the default once ``fit_readout`` ran) this
+        returns predictions — {uid: (T_request, O)} — via the fused readout
+        epilogue.  ``return_states=True`` preserves the old contract and
+        returns {uid: (T_request, R)} states; it is also the fallback when
+        no readout is attached.  Padding overhead lands in ``self.stats``.
         """
+        if return_states is None:
+            return_states = self._w_out is None
+        fn = self.rollout if return_states else self.predictions
         bucketer = bucketer or PaddingBucketer()
         results = {}
         for mb in bucketer.group(list(requests)):
-            states = self.rollout(jnp.asarray(mb.inputs),
-                                  real_steps=mb.real_steps)
+            out = fn(jnp.asarray(mb.inputs), real_steps=mb.real_steps)
             for j, req in enumerate(mb.requests):
-                results[req.uid] = states[j, :req.length]
+                results[req.uid] = out[j, :req.length]
         return results
 
 
@@ -156,7 +217,11 @@ def engine_for(params: ESNParams, backend: str = "auto",
 
     Cached per backend so repeated ``run_reservoir(engine="pallas")`` calls
     reuse the compiled rollout instead of rebuilding plan + jit each time.
-    Non-default kwargs (stats, interpret, ...) bypass the cache — construct
+    The cache key includes the identity of everything the engine bakes in
+    at construction — the reservoir matrix, the *readout* (so a stale
+    compiled rollout is never served after ``fit_readout`` replaces
+    ``w_out``), and the leak/mode/precision config.  Non-default kwargs
+    (stats, interpret, ...) bypass the cache — construct
     :class:`ReservoirEngine` directly for those.
     """
     key = "xla" if backend == "auto" else backend
@@ -164,7 +229,13 @@ def engine_for(params: ESNParams, backend: str = "auto",
     if cache is None:
         cache = params._serve_engines = {}
     eng = cache.get(key)
-    if eng is None or eng.params is not params or kwargs:
+    cfg = params.config
+    stale = (eng is None or eng.params is not params
+             or eng._w_out is not params.w_out
+             or eng.params.w is not params.w
+             or (eng.config.leak, eng.config.mode, eng.config.state_bits)
+             != (cfg.leak, cfg.mode, cfg.state_bits))
+    if stale or kwargs:
         eng = ReservoirEngine(params, backend=backend, **kwargs)
         if not kwargs:
             cache[key] = eng

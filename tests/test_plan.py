@@ -1,0 +1,264 @@
+"""ExecutionPlan compiler: one lowering shared by every kernel family.
+
+The contract mirrors the paper's synthesis step: the FixedMatrix is
+lowered exactly once (``plan_for`` caches per instance), every consumer —
+bitplane gemv, BCSR matmul, fused rollout, serve engine — builds from the
+same plan, and with a power-of-two dequant scale all three kernel
+families produce *bit-identical* integer results.  On top of the shared
+plan: fused-readout parity and banded-vs-unbanded state equality,
+including the dim-2048 fp32 acceptance point.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.esn import (ESNConfig, fit_readout, init_esn, predict,
+                            run_readout, run_reservoir)
+from repro.core.sparse import FixedMatrix, random_sparse_matrix
+from repro.kernels.bcsr_matmul.ops import BcsrMatmul
+from repro.kernels.bitplane_gemv.ops import BitplaneGemv
+from repro.kernels.reservoir_rollout.ops import FusedRollout
+from repro.kernels.reservoir_rollout.ref import rollout_fp32_ref
+from repro.plan import DEFAULT_VMEM_BUDGET, ExecutionPlan, plan_for
+from repro.serve.engine import ReservoirEngine
+
+
+def _unit_scale_matrix(dim=256, block=64, seed=0):
+    """Integer matrix with amax == qmax so scale == 1.0 exactly: float and
+    integer kernel paths then agree bit for bit (products stay < 2**24).
+    Row blocks past the first half are zeroed so block culling is real."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-127, 128, size=(dim, dim)).astype(np.float64)
+    q[rng.random((dim, dim)) < 0.9] = 0
+    q[dim // 2:, :] = 0                      # structural zeros -> culled blocks
+    q[0, 0] = 127                            # pins amax -> scale = 1.0
+    fm = FixedMatrix.compile(q, weight_bits=8, mode="csd", block=block,
+                             rng=rng)
+    assert fm.scale == 1.0
+    return fm
+
+
+class TestPlanCompile:
+    def test_plan_cached_per_matrix(self):
+        fm = _unit_scale_matrix()
+        plan = plan_for(fm)
+        assert plan_for(fm) is plan
+        assert fm.plan() is plan
+        assert isinstance(plan, ExecutionPlan)
+        # layouts are cached per (mode, budget) too
+        assert plan.rollout_layout("fp32") is plan.rollout_layout("fp32")
+
+    def test_stats_report_real_culling(self):
+        fm = _unit_scale_matrix()
+        s = plan_for(fm).stats
+        assert s.blocks_nnz == fm.blocks.n_blocks_nnz
+        assert s.fp32_terms_culled > 0           # zeroed row blocks
+        assert s.int8_terms_culled > 0           # plane-level culling on top
+        assert s.int8_terms_kept <= s.width * s.blocks_nnz
+        assert s.ones == fm.ones
+        d = s.as_dict()
+        assert d["fp32_terms_culled"] == s.fp32_terms_culled
+        assert 0.0 < d["block_density"] < 1.0
+
+    def test_fpga_cost_uses_exact_ones(self):
+        fm = _unit_scale_matrix()
+        plan = plan_for(fm)
+        dp = plan.fpga_cost()
+        assert dp.ones == fm.ones
+        assert dp.cycles == fm.fpga_cost().cycles      # Eq. 5
+        assert "culled" in plan.describe()
+
+    def test_col_terms_cull_zero_blocks(self):
+        fm = _unit_scale_matrix()
+        plan = plan_for(fm)
+        for mode in ("fp32", "int8"):
+            rows_used = {t[-1] for terms in plan.col_terms(mode)
+                         for t in terms}
+            # only the populated top half of the row blocks appears
+            assert rows_used <= set(range(plan.nbr // 2))
+
+
+class TestCrossKernelEquivalence:
+    """All three kernel families, one shared plan, bit-identical results."""
+
+    def test_bit_identical_across_families(self):
+        fm = _unit_scale_matrix()
+        plan = plan_for(fm)
+        rng = np.random.default_rng(1)
+        xq = rng.integers(-4, 5, size=(3, 256)).astype(np.int32)
+
+        # family 1: digit-plane gemv, exact integer
+        y_int = np.asarray(BitplaneGemv(plan)(jnp.asarray(xq)))
+        np.testing.assert_array_equal(
+            y_int, xq @ np.asarray(fm.q, np.int64).astype(np.int32))
+
+        # family 2: BCSR float matmul — scale 1.0 keeps it exact integers
+        y_bcsr = np.asarray(BcsrMatmul(plan)(jnp.asarray(xq, jnp.float32)))
+        np.testing.assert_array_equal(y_bcsr, y_int.astype(np.float32))
+
+        # family 3: fused rollout, int8 mode, one step with w_in = 0 and
+        # x0 chosen so the per-step requantization recovers xq exactly.
+        w_in = np.zeros((1, 256), np.float32)
+        fr = FusedRollout(plan, w_in, leak=1.0, mode="int8")
+        x0 = jnp.asarray(xq, jnp.float32) / fr.smax
+        u = jnp.zeros((1, 3, 1), jnp.float32)
+        got = np.asarray(fr(u, x0))[0]
+        # expectation via jnp so the tanh implementation matches bit for bit
+        want = np.asarray(jnp.tanh(jnp.asarray(y_int, jnp.float32)
+                                   * np.float32(fr.recur_scale)))
+        np.testing.assert_array_equal(got, want)
+
+    def test_consumers_share_the_same_plan_object(self):
+        fm = _unit_scale_matrix(dim=128, block=64, seed=2)
+        plan = plan_for(fm)
+        assert BitplaneGemv(fm).plan is plan
+        assert BcsrMatmul(fm).layout is plan.bcsr
+        assert FusedRollout(fm, np.zeros((1, 128), np.float32)).plan is plan
+
+    def test_fp32_rollout_matches_blocksparse_reference(self):
+        rng = np.random.default_rng(3)
+        w = random_sparse_matrix(192, 192, 0.9, rng) * 0.05
+        w[96:, :] = 0.0                       # culled blocks stay in play
+        fm = FixedMatrix.compile(w, weight_bits=8, mode="csd", block=64,
+                                 rng=rng)
+        w_in = rng.uniform(-0.5, 0.5, (1, 192)).astype(np.float32)
+        fr = FusedRollout(plan_for(fm), w_in, leak=0.4, mode="fp32")
+        u = jnp.asarray(rng.standard_normal((5, 2, 1)), jnp.float32)
+        got = np.asarray(fr(u))
+        ref = np.asarray(rollout_fp32_ref(
+            u, jnp.asarray(fm.dense_f32()), jnp.asarray(w_in),
+            jnp.zeros((2, 192), jnp.float32), leak=0.4))
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+class TestBandedRollout:
+    def _banded(self, dim=256, block=64, seed=1, budget_tiles=6):
+        cfg = ESNConfig(reservoir_dim=dim, element_sparsity=0.8, leak=0.5,
+                        seed=seed, block=block)
+        p = init_esn(cfg)
+        budget = budget_tiles * block * block * 4
+        return p, budget
+
+    def test_partition_respects_budget(self):
+        p, budget = self._banded()
+        layout = plan_for(p.w).rollout_layout("fp32", vmem_budget=budget)
+        assert layout.n_bands > 1
+        assert layout.band_data_bytes <= budget
+        assert all(b.data_bytes <= budget for b in layout.bands)
+        # bands tile the output column blocks contiguously and completely
+        edges = [(b.col_lo, b.col_hi) for b in layout.bands]
+        assert edges[0][0] == 0 and edges[-1][1] == plan_for(p.w).nbc
+        assert all(a[1] == b[0] for a, b in zip(edges, edges[1:]))
+
+    @pytest.mark.parametrize("mode,esn_mode", [("fp32", "fp32"),
+                                               ("int8", "int8-csd")])
+    def test_banded_bitwise_equals_unbanded(self, mode, esn_mode):
+        cfg = ESNConfig(reservoir_dim=256, element_sparsity=0.8, leak=0.5,
+                        mode=esn_mode, seed=4, block=64)
+        p = init_esn(cfg)
+        plan = plan_for(p.w)
+        # int8 columns carry up to width x row-block plane tiles, so the
+        # budget floor (one column per band) is higher than in fp32
+        budget = 6 * 64 * 64 * 4 if mode == "fp32" else 40 * 64 * 64
+        fr_un = FusedRollout(plan, np.asarray(p.w_in), leak=0.5, mode=mode,
+                             vmem_budget=None)
+        fr_b = FusedRollout(plan, np.asarray(p.w_in), leak=0.5, mode=mode,
+                            vmem_budget=budget)
+        assert fr_un.n_bands == 1 and fr_b.n_bands > 1
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.standard_normal((4, 2, 1)), jnp.float32)
+        np.testing.assert_array_equal(np.asarray(fr_un(u)),
+                                      np.asarray(fr_b(u)))
+
+    def test_budget_smaller_than_one_column_raises(self):
+        p, _ = self._banded()
+        with pytest.raises(ValueError, match="vmem_budget"):
+            plan_for(p.w).rollout_layout("fp32", vmem_budget=1024)
+
+    def test_dim_2048_fp32_fits_budget_and_matches_reference(self):
+        """Acceptance: dim-2048 fp32 compiles banded under a 2 MiB tile
+        budget (16 MiB unbanded would overflow VMEM) and matches the
+        unbanded jnp reference."""
+        rng = np.random.default_rng(0)
+        w = random_sparse_matrix(2048, 2048, 0.9, rng) * 0.05
+        w[1024:, :] = 0.0                      # structured zeros at scale
+        fm = FixedMatrix.compile(w, weight_bits=8, mode="csd", block=128,
+                                 rng=rng)
+        budget = 2 * 2**20
+        plan = plan_for(fm)
+        layout = plan.rollout_layout("fp32", vmem_budget=budget)
+        assert layout.n_bands > 1
+        assert layout.band_data_bytes <= budget
+        assert all(b.data_bytes <= budget for b in layout.bands)
+        w_in = rng.uniform(-0.5, 0.5, (1, 2048)).astype(np.float32)
+        fr = FusedRollout(plan, w_in, leak=0.5, mode="fp32",
+                          vmem_budget=budget)
+        u = jnp.asarray(rng.standard_normal((2, 2, 1)), jnp.float32)
+        got = np.asarray(fr(u))
+        ref = np.asarray(rollout_fp32_ref(
+            u, jnp.asarray(fm.dense_f32()), jnp.asarray(w_in),
+            jnp.zeros((2, 2048), jnp.float32), leak=0.5))
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+class TestFusedReadout:
+    def _trained(self, mode="fp32", dim=128, block=64, seed=5):
+        """ESN with a trained readout; targets are a smooth function of the
+        input so the ridge solution keeps moderate weights (an overfit
+        readout with huge weights would amplify float accumulation noise
+        past any meaningful parity tolerance)."""
+        cfg = ESNConfig(reservoir_dim=dim, element_sparsity=0.8, mode=mode,
+                        leak=0.6, seed=seed, block=block, output_dim=2)
+        p = init_esn(cfg)
+        rng = np.random.default_rng(seed)
+        u = jnp.asarray(rng.standard_normal((40, 1)), jnp.float32)
+        states = run_reservoir(p, u, engine="scan")
+        y = jnp.concatenate([u, jnp.roll(u, 1)], axis=-1)
+        return fit_readout(p, states, y, lam=1e-2), u
+
+    def test_pallas_epilogue_matches_states_then_matmul(self):
+        p, _ = self._trained()
+        fr = FusedRollout(plan_for(p.w), np.asarray(p.w_in), leak=0.6,
+                          mode="fp32", w_out=np.asarray(p.w_out))
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.standard_normal((6, 3, 1)), jnp.float32)
+        states, preds = fr(u, return_states=True, return_preds=True)
+        want = np.asarray(states) @ np.asarray(p.w_out)
+        np.testing.assert_allclose(np.asarray(preds), want,
+                                   rtol=1e-5, atol=1e-6)
+        # prediction-only launch (no states materialized) is identical
+        only = fr(u, return_states=False, return_preds=True)
+        np.testing.assert_array_equal(np.asarray(only), np.asarray(preds))
+
+    def test_readout_every_k(self):
+        p, _ = self._trained(seed=6)
+        fr = FusedRollout(plan_for(p.w), np.asarray(p.w_in), leak=0.6,
+                          mode="fp32", w_out=np.asarray(p.w_out),
+                          readout_every=2)
+        rng = np.random.default_rng(1)
+        u = jnp.asarray(rng.standard_normal((6, 2, 1)), jnp.float32)
+        states, preds = fr(u, return_states=True, return_preds=True)
+        assert preds.shape == (3, 2, 2)
+        want = np.asarray(states)[1::2] @ np.asarray(p.w_out)
+        np.testing.assert_allclose(np.asarray(preds), want,
+                                   rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_engine_predictions_match_scan_predict(self, backend):
+        p, _ = self._trained(mode="int8-csd" if backend == "pallas"
+                             else "fp32", seed=7)
+        eng = ReservoirEngine(p, backend=backend)
+        rng = np.random.default_rng(2)
+        u = jnp.asarray(rng.standard_normal((3, 12, 1)), jnp.float32)
+        got = np.asarray(eng.predictions(u))
+        want = np.asarray(predict(p, run_reservoir(p, u, engine="scan")))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_run_readout_fused_path(self):
+        p, u = self._trained(seed=8)
+        got = np.asarray(run_readout(p, u))
+        want = np.asarray(predict(p, run_reservoir(p, u, engine="scan")))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+        scan = np.asarray(run_readout(p, u, engine="scan"))
+        np.testing.assert_array_equal(scan, want)

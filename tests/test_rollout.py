@@ -141,10 +141,10 @@ class TestStaticCulling:
         fm, w_in = self._block_structured(kmode)
         fr = FusedRollout(fm, w_in, mode=kmode)
         assert fm.blocks.n_blocks_nnz == 4       # 2x2 of 64-blocks
-        rows_used = {ri for terms in fr.col_plan for term in terms
-                     for ri in [term[-1]]}
+        col_terms = fr.plan.col_terms(kmode)
+        rows_used = {term[-1] for terms in col_terms for term in terms}
         assert rows_used == {0, 1}
-        assert all(not terms for terms in fr.col_plan[2:])
+        assert all(not terms for terms in col_terms[2:])
 
     def test_int8_plane_culling_is_finer_than_blocks(self):
         # One block at full quantized magnitude, one block whose weights
@@ -164,8 +164,8 @@ class TestStaticCulling:
         # the +-1 block sits in column block 1 and uses plane 0 only
         small_di = int(np.flatnonzero((fm.blocks.block_rows == 1)
                                       & (fm.blocks.block_cols == 1))[0])
-        small_planes = {w for terms in fr.col_plan for (w, di, _ri) in terms
-                        if di == small_di}
+        small_planes = {w for terms in fr.plan.col_terms("int8")
+                        for (di, w, _ri) in terms if di == small_di}
         assert small_planes == {0}
 
     def test_culled_rollout_still_exact(self):

@@ -1,10 +1,11 @@
-"""Serving layer: engine dispatch, padding buckets, telemetry."""
+"""Serving layer: engine dispatch, padding buckets, readout, telemetry."""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.esn import ESNConfig, init_esn, run_reservoir
+from repro.core.esn import (ESNConfig, fit_readout, init_esn, predict,
+                            run_reservoir)
 from repro.serve import (PaddingBucketer, ReservoirEngine, RolloutRequest,
                          ServeStats, engine_for)
 
@@ -13,6 +14,17 @@ def _params(mode="fp32", dim=96, leak=1.0, seed=1, block=32):
     cfg = ESNConfig(reservoir_dim=dim, element_sparsity=0.8, mode=mode,
                     leak=leak, seed=seed, block=block)
     return init_esn(cfg)
+
+
+def _trained_params(mode="fp32", dim=96, seed=1, block=32, out=2):
+    cfg = ESNConfig(reservoir_dim=dim, element_sparsity=0.8, mode=mode,
+                    leak=0.7, seed=seed, block=block, output_dim=out)
+    p = init_esn(cfg)
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.standard_normal((50, 1)), jnp.float32)
+    states = run_reservoir(p, u, engine="scan")
+    y = jnp.concatenate([u, jnp.roll(u, 1)], axis=-1)
+    return fit_readout(p, states, y, lam=1e-2)
 
 
 class TestPaddingBucketer:
@@ -158,6 +170,56 @@ class TestServeRequests:
             assert got.shape == (r.length, 64)
             np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
 
+    def test_serve_returns_predictions_with_trained_readout(self):
+        """Acceptance: serve() answers with W_out applied in the fused
+        epilogue, matching predict() over the scan-baseline states."""
+        p = _trained_params(dim=64, block=32, seed=5)
+        eng = ReservoirEngine(p)
+        rng = np.random.default_rng(5)
+        reqs = [RolloutRequest(
+                    uid=i,
+                    inputs=rng.standard_normal((t, 1)).astype(np.float32))
+                for i, t in enumerate([6, 14, 9])]
+        res = eng.serve(reqs, bucketer=PaddingBucketer(
+            len_buckets=(8, 16), batch_buckets=(1, 2, 4)))
+        for r in reqs:
+            states = run_reservoir(p, jnp.asarray(r.inputs), engine="scan")
+            want = np.asarray(predict(p, states))
+            got = np.asarray(res[r.uid])
+            assert got.shape == (r.length, 2)
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_serve_return_states_preserves_old_contract(self):
+        p = _trained_params(dim=64, block=32, seed=6)
+        eng = ReservoirEngine(p)
+        req = RolloutRequest(uid="a", inputs=np.ones((7, 1), np.float32))
+        res = eng.serve([req], return_states=True)
+        assert res["a"].shape == (7, 64)
+        want = np.asarray(run_reservoir(p, jnp.asarray(req.inputs),
+                                        engine="scan"))
+        np.testing.assert_allclose(np.asarray(res["a"]), want,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_serve_without_readout_falls_back_to_states(self):
+        p = _params(dim=64, block=32)
+        eng = ReservoirEngine(p)
+        res = eng.serve([RolloutRequest(uid=0,
+                                        inputs=np.ones((5, 1), np.float32))])
+        assert res[0].shape == (5, 64)
+        with pytest.raises(ValueError, match="readout not trained"):
+            eng.predictions(jnp.ones((1, 5, 1), jnp.float32))
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_pallas_and_xla_serve_predictions_agree(self, backend):
+        p = _trained_params(mode="int8-csd", dim=64, block=32, seed=7)
+        eng = ReservoirEngine(p, backend=backend)
+        rng = np.random.default_rng(7)
+        u = jnp.asarray(rng.standard_normal((2, 8, 1)), jnp.float32)
+        got = np.asarray(eng.predictions(u))
+        want = np.asarray(predict(p, run_reservoir(p, u, engine="scan")))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
     def test_padding_overhead_lands_in_stats(self):
         p = _params(dim=64, block=32)
         eng = ReservoirEngine(p)
@@ -168,3 +230,35 @@ class TestServeRequests:
         assert eng.stats.steps_real == 5
         assert eng.stats.steps_padded == 32
         assert eng.stats.padding_efficiency == pytest.approx(5 / 32)
+
+
+class TestEngineCache:
+    def test_engine_cache_reused_for_same_readout(self):
+        p = _trained_params(dim=64, block=32, seed=8)
+        assert engine_for(p) is engine_for(p)
+
+    def test_engine_cache_invalidated_when_readout_replaced(self):
+        """Satellite: engine_for must not serve a stale compiled rollout
+        after the readout is swapped on the same params object."""
+        p = _trained_params(dim=64, block=32, seed=9)
+        eng_old = engine_for(p)
+        u = jnp.asarray(np.random.default_rng(9).standard_normal((2, 6, 1)),
+                        jnp.float32)
+        old = np.asarray(eng_old.predictions(u))
+        p.w_out = p.w_out * 2.0              # in-place readout replacement
+        eng_new = engine_for(p)
+        assert eng_new is not eng_old
+        got = np.asarray(eng_new.predictions(u))
+        np.testing.assert_allclose(got, 2.0 * old, rtol=1e-5, atol=1e-6)
+
+    def test_fit_readout_produces_freshly_keyed_engine(self):
+        p = _params(dim=64, block=32, seed=10)
+        eng0 = engine_for(p)
+        rng = np.random.default_rng(10)
+        u = jnp.asarray(rng.standard_normal((30, 1)), jnp.float32)
+        states = run_reservoir(p, u, engine="scan")
+        p2 = fit_readout(p, states, jnp.concatenate([u, u], axis=-1),
+                         lam=1e-2)
+        eng1 = engine_for(p2)
+        assert eng1 is not eng0
+        assert eng1._w_out is p2.w_out
