@@ -189,8 +189,18 @@ def run_readout(params: ESNParams, inputs: jnp.ndarray,
 
 def fit_readout(params: ESNParams, states: jnp.ndarray, targets: jnp.ndarray,
                 lam: float = 1e-6, washout: int = 0) -> ESNParams:
-    s = states.reshape(-1, states.shape[-1])[washout:]
-    t = targets.reshape(-1, targets.shape[-1])[washout:]
+    """Ridge-fit ``W_out`` on (T, R) or batched (B, T, R) state trajectories.
+
+    ``washout`` discards the initial transient of *each* sequence: for
+    batched states the first ``washout`` steps are dropped per sequence
+    (along the time axis) before flattening, not just from the head of the
+    flattened array.
+    """
+    if washout:
+        states = states[..., washout:, :]
+        targets = targets[..., washout:, :]
+    s = states.reshape(-1, states.shape[-1])
+    t = targets.reshape(-1, targets.shape[-1])
     w_out = ridge.ridge_fit(s, t, lam)
     return dataclasses.replace(params, w_out=w_out)
 

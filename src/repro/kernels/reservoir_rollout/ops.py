@@ -70,10 +70,14 @@ class FusedRollout:
         return self.layout.n_bands
 
     def __call__(self, u_seq: jnp.ndarray, x0: jnp.ndarray | None = None, *,
-                 return_states: bool = True, return_preds: bool = False):
-        """u_seq: (T, B, I) -> states (T, B, dim), preds
-        (T // readout_every, B, out_dim), or (states, preds)."""
-        assert return_states or return_preds
+                 return_states: bool = True, return_preds: bool = False,
+                 return_final: bool = False):
+        """u_seq: (T, B, I) -> the requested outputs, in order: states
+        (T, B, dim), preds (T // readout_every, B, out_dim), final state
+        (B, dim).  A bare array when exactly one is requested, else a
+        tuple.  ``return_final`` hands back x(T) so a later chunk can
+        resume the rollout bit-identically (continuous batching)."""
+        assert return_states or return_preds or return_final
         assert not return_preds or self.w_out is not None, \
             "fused readout requested but no w_out attached"
         t, b, _ = u_seq.shape
@@ -89,10 +93,13 @@ class FusedRollout:
             block=self.block, mode=self.mode, smax=self.smax,
             recur_scale=self.recur_scale, readout_every=self.readout_every,
             want_states=return_states, want_preds=return_preds,
-            interpret=self.interpret)
-        if return_states and return_preds:
-            states, preds = out
-            return states[:, :, : self.dim], preds[:, :, : self.out_dim]
+            want_final=return_final, interpret=self.interpret)
+        parts = list(out) if isinstance(out, tuple) else [out]
+        trimmed = []
+        if return_states:
+            trimmed.append(parts.pop(0)[:, :, : self.dim])
         if return_preds:
-            return out[:, :, : self.out_dim]
-        return out[:, :, : self.dim]
+            trimmed.append(parts.pop(0)[:, :, : self.out_dim])
+        if return_final:
+            trimmed.append(parts.pop(0)[:, : self.dim])
+        return trimmed[0] if len(trimmed) == 1 else tuple(trimmed)

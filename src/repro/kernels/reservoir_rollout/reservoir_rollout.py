@@ -39,7 +39,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _rollout_kernel(*refs, band_plans, leak, block, mode, smax, recur_scale,
-                    n_bands, readout_every, want_states, want_preds):
+                    n_bands, n_steps, readout_every, want_states, want_preds,
+                    want_final):
     if want_preds:
         u_ref, w_ref, win_ref, wout_ref, x0_ref, *rest = refs
     else:
@@ -47,6 +48,7 @@ def _rollout_kernel(*refs, band_plans, leak, block, mode, smax, recur_scale,
         wout_ref = None
     o_ref = rest.pop(0) if want_states else None
     y_ref = rest.pop(0) if want_preds else None
+    f_ref = rest.pop(0) if want_final else None
     x_ref, nx_ref = rest
 
     t = pl.program_id(0)
@@ -94,6 +96,12 @@ def _rollout_kernel(*refs, band_plans, leak, block, mode, smax, recur_scale,
         x_ref[...] = nx
         if want_states:
             o_ref[0] = nx
+        if want_final:
+            # The chunked-serving carry: x(T) leaves the launch as its own
+            # (B, R) output so a later chunk can resume bit-identically.
+            @pl.when(t == n_steps - 1)
+            def _emit_final_state():
+                f_ref[...] = nx
         if want_preds:
             if readout_every == 1:
                 y_ref[0] = nx @ wout_ref[...]
@@ -105,7 +113,7 @@ def _rollout_kernel(*refs, band_plans, leak, block, mode, smax, recur_scale,
 
 @functools.partial(jax.jit, static_argnames=(
     "band_plans", "leak", "block", "mode", "smax", "recur_scale",
-    "readout_every", "want_states", "want_preds", "interpret"))
+    "readout_every", "want_states", "want_preds", "want_final", "interpret"))
 def reservoir_rollout(
     u_seq: jnp.ndarray,
     w_data: jnp.ndarray,
@@ -122,6 +130,7 @@ def reservoir_rollout(
     readout_every: int = 1,
     want_states: bool = True,
     want_preds: bool = False,
+    want_final: bool = False,
     interpret: bool = True,
 ):
     """Fused T-step rollout for a state batch, optionally banded + readout.
@@ -145,18 +154,21 @@ def reservoir_rollout(
         readout_every: emit predictions every k steps (k must divide T).
         want_states / want_preds: which outputs to materialize; dropping
             states keeps the trajectory entirely in VMEM.
+        want_final: additionally emit x(T), the post-rollout state batch
+            (B, R) — the carry the chunked scheduler resumes from.
 
     Returns:
-        states (T, B, R), preds (T // readout_every, B, O), or the tuple
-        (states, preds) — whichever of ``want_states`` / ``want_preds``
-        asks for both.
+        The requested outputs in the order states (T, B, R),
+        preds (T // readout_every, B, O), final state (B, R) — a bare
+        array when exactly one of ``want_states`` / ``want_preds`` /
+        ``want_final`` is set, else a tuple.
     """
     t, b, i = u_seq.shape
     r = x0.shape[1]
     n_bands, max_terms = w_data.shape[:2]
     assert r % block == 0 and w_in.shape == (i, r), (u_seq.shape, w_in.shape)
     assert len(band_plans) == n_bands
-    assert want_states or want_preds
+    assert want_states or want_preds or want_final
     if want_preds:
         assert w_out is not None and w_out.shape[0] == r, w_out
         assert t % readout_every == 0, (t, readout_every)
@@ -165,8 +177,8 @@ def reservoir_rollout(
     kernel = functools.partial(
         _rollout_kernel, band_plans=band_plans, leak=leak, block=block,
         mode=mode, smax=smax, recur_scale=recur_scale, n_bands=n_bands,
-        readout_every=readout_every, want_states=want_states,
-        want_preds=want_preds)
+        n_steps=t, readout_every=readout_every, want_states=want_states,
+        want_preds=want_preds, want_final=want_final)
 
     in_specs = [
         pl.BlockSpec((1, b, i), lambda ti, ki: (ti, 0, 0)),        # u(t)
@@ -191,6 +203,9 @@ def reservoir_rollout(
         out_specs.append(pl.BlockSpec(
             (1, b, o),
             lambda ti, ki, _k=readout_every: (ti // _k, 0, 0)))
+    if want_final:
+        out_shapes.append(jax.ShapeDtypeStruct((b, r), jnp.float32))
+        out_specs.append(pl.BlockSpec((b, r), lambda ti, ki: (0, 0)))
 
     single = len(out_shapes) == 1
     out = pl.pallas_call(

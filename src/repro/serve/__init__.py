@@ -1,14 +1,19 @@
 """Serving layer: fused batched reservoir rollouts behind request batching.
 
-- ``engine``   — ReservoirEngine: fused rollout (xla scan / pallas kernel)
-- ``batching`` — padding-bucket request batching
-- ``stats``    — throughput / latency / padding-efficiency telemetry
+- ``engine``    — ReservoirEngine: fused rollout (xla scan / pallas kernel)
+- ``batching``  — padding-bucket request batching
+- ``scheduler`` — continuous batching: slot pool + time-stamped queue,
+  chunked rollouts with per-slot reservoir-state carry
+- ``stats``     — throughput / latency / padding / queue telemetry
 """
 
 from repro.serve.batching import (MicroBatch, PaddingBucketer,  # noqa: F401
                                   RolloutRequest)
 from repro.serve.engine import ReservoirEngine, engine_for  # noqa: F401
+from repro.serve.scheduler import (AsyncReservoirServer,  # noqa: F401
+                                   ContinuousBatcher, QueuedRequest)
 from repro.serve.stats import ServeStats  # noqa: F401
 
 __all__ = ["ReservoirEngine", "engine_for", "ServeStats", "PaddingBucketer",
-           "RolloutRequest", "MicroBatch"]
+           "RolloutRequest", "MicroBatch", "AsyncReservoirServer",
+           "ContinuousBatcher", "QueuedRequest"]

@@ -25,10 +25,17 @@ DEFAULT_BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
 
 @dataclasses.dataclass
 class RolloutRequest:
-    """One serving request: roll ``inputs`` (T, input_dim) through the ESN."""
+    """One serving request: roll ``inputs`` (T, input_dim) through the ESN.
+
+    ``x0`` optionally seeds the reservoir state for this request (shape
+    (reservoir_dim,)); ``None`` means the zero state.  The continuous
+    scheduler uses the same field to resume a sequence from its carried
+    state mid-stream.
+    """
 
     uid: Any
     inputs: np.ndarray
+    x0: np.ndarray | None = None
 
     @property
     def length(self) -> int:
@@ -43,6 +50,7 @@ class MicroBatch:
     inputs: np.ndarray            # (batch_padded, len_padded, input_dim)
     lengths: list
     pad_value: float = 0.0
+    x0: np.ndarray | None = None  # (batch_padded, reservoir_dim) or None
 
     @property
     def real_steps(self) -> int:
@@ -74,7 +82,11 @@ class PaddingBucketer:
         for bb in self.batch_buckets:
             if b <= bb:
                 return bb
-        return self.batch_buckets[-1]
+        # beyond the top bucket: round *up* to a multiple of it (mirrors
+        # pad_len) — padding down would hand a direct caller a buffer
+        # smaller than the batch.
+        top = self.batch_buckets[-1]
+        return ((b + top - 1) // top) * top
 
     @property
     def max_batch(self) -> int:
@@ -95,7 +107,15 @@ class PaddingBucketer:
                                dtype=np.asarray(chunk[0].inputs).dtype)
                 for j, req in enumerate(chunk):
                     buf[j, :req.length] = req.inputs
+                x0 = None
+                if any(r.x0 is not None for r in chunk):
+                    dim = next(np.asarray(r.x0).shape[-1] for r in chunk
+                               if r.x0 is not None)
+                    x0 = np.zeros((bpad, dim), np.float32)
+                    for j, req in enumerate(chunk):
+                        if req.x0 is not None:
+                            x0[j] = req.x0
                 batches.append(MicroBatch(
                     requests=list(chunk), inputs=buf,
-                    lengths=[r.length for r in chunk]))
+                    lengths=[r.length for r in chunk], x0=x0))
         return batches

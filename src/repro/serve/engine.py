@@ -74,11 +74,19 @@ class ReservoirEngine:
                 state_bits=self.config.state_bits, interpret=interpret,
                 w_out=self._w_out, vmem_budget=vmem_budget)
         else:
-            self._xla_fn = self._build_xla_fn(with_readout=False)
-            self._xla_pred_fn = None  # built lazily on first predictions()
+            # jitted rollouts keyed on (with_readout, with_final); built
+            # lazily except the plain states path every caller hits first.
+            self._xla_fns = {(False, False): self._build_xla_fn(False, False)}
+
+    def _xla(self, with_readout: bool, with_final: bool):
+        fn = self._xla_fns.get((with_readout, with_final))
+        if fn is None:
+            fn = self._xla_fns[(with_readout, with_final)] = \
+                self._build_xla_fn(with_readout, with_final)
+        return fn
 
     # -- fused XLA rollout ---------------------------------------------------
-    def _build_xla_fn(self, with_readout: bool):
+    def _build_xla_fn(self, with_readout: bool, with_final: bool):
         params, cfg = self.params, self.config
         w, w_in = params.w, params.w_in
         int8 = self._int8
@@ -110,18 +118,29 @@ class ReservoirEngine:
                 nxt = (1.0 - leak) * x + leak * nxt
                 return nxt, nxt
 
-            _, states = jax.lax.scan(body, x0, uproj_t)
+            xf, states = jax.lax.scan(body, x0, uproj_t)
             out = jnp.swapaxes(states, 0, 1)                 # (B, T, R)
             if with_readout:
                 # Fused readout: W_out applied inside the same compiled
                 # program — one dispatch, predictions only leave the device,
                 # and the result is the exact predict(states) contraction.
-                return out @ w_out                           # (B, T, O)
+                out = out @ w_out                            # (B, T, O)
+            if with_final:
+                # xf is the scan carry — exactly x(T), so chunked rollouts
+                # that resume from it reproduce the one-shot trajectory
+                # bit for bit.
+                return out, xf
             return out
 
         return jax.jit(rollout)
 
     # -- public API ----------------------------------------------------------
+    @property
+    def has_readout(self) -> bool:
+        """Whether a trained ``W_out`` is baked into this engine (serving
+        defaults to predictions when True, states otherwise)."""
+        return self._w_out is not None
+
     def _prepare(self, inputs, x0):
         u = jnp.asarray(inputs)
         single = u.ndim == 2
@@ -150,26 +169,40 @@ class ReservoirEngine:
 
     def rollout(self, inputs: jnp.ndarray,
                 x0: jnp.ndarray | None = None,
-                real_steps: int | None = None) -> jnp.ndarray:
-        """Roll the reservoir: (T, I) -> (T, R) or (B, T, I) -> (B, T, R)."""
+                real_steps: int | None = None,
+                return_final_state: bool = False):
+        """Roll the reservoir: (T, I) -> (T, R) or (B, T, I) -> (B, T, R).
+
+        With ``return_final_state=True`` also returns x(T) — (R,) / (B, R)
+        — the carry a later chunked call resumes from bit-identically.
+        """
         u, x0b, single = self._prepare(inputs, x0)
         b, t, _ = u.shape
         t0 = time.perf_counter()
         if self.backend == "pallas":
-            states = self._fused(jnp.swapaxes(u, 0, 1), x0b)
+            out = self._fused(jnp.swapaxes(u, 0, 1), x0b,
+                              return_final=return_final_state)
+            states, xf = out if return_final_state else (out, None)
             states = jnp.swapaxes(states, 0, 1)
         else:
-            states = self._xla_fn(u, x0b)
+            out = self._xla(False, return_final_state)(u, x0b)
+            states, xf = out if return_final_state else (out, None)
         self._record(states, b, t, t0, real_steps)
+        if return_final_state:
+            return (states[0], xf[0]) if single else (states, xf)
         return states[0] if single else states
 
     def predictions(self, inputs: jnp.ndarray,
                     x0: jnp.ndarray | None = None,
-                    real_steps: int | None = None) -> jnp.ndarray:
+                    real_steps: int | None = None,
+                    return_final_state: bool = False):
         """Fused-readout rollout: (B, T, I) -> (B, T, O) predictions.
 
         ``W_out`` is applied inside the rollout (scan body / Pallas
         epilogue), so the (B, T, R) state trajectory is never materialized.
+        ``return_final_state=True`` additionally returns x(T), letting the
+        continuous scheduler serve predictions chunk by chunk while
+        carrying reservoir state between chunks.
         """
         if self._w_out is None:
             raise ValueError("readout not trained; call fit_readout first "
@@ -178,14 +211,17 @@ class ReservoirEngine:
         b, t, _ = u.shape
         t0 = time.perf_counter()
         if self.backend == "pallas":
-            preds = self._fused(jnp.swapaxes(u, 0, 1), x0b,
-                                return_states=False, return_preds=True)
+            out = self._fused(jnp.swapaxes(u, 0, 1), x0b,
+                              return_states=False, return_preds=True,
+                              return_final=return_final_state)
+            preds, xf = out if return_final_state else (out, None)
             preds = jnp.swapaxes(preds, 0, 1)
         else:
-            if self._xla_pred_fn is None:
-                self._xla_pred_fn = self._build_xla_fn(with_readout=True)
-            preds = self._xla_pred_fn(u, x0b)
+            out = self._xla(True, return_final_state)(u, x0b)
+            preds, xf = out if return_final_state else (out, None)
         self._record(preds, b, t, t0, real_steps)
+        if return_final_state:
+            return (preds[0], xf[0]) if single else (preds, xf)
         return preds[0] if single else preds
 
     def serve(self, requests: Sequence[RolloutRequest],
@@ -198,14 +234,18 @@ class ReservoirEngine:
         epilogue.  ``return_states=True`` preserves the old contract and
         returns {uid: (T_request, R)} states; it is also the fallback when
         no readout is attached.  Padding overhead lands in ``self.stats``.
+
+        Requests carrying an ``x0`` seed their slot of the batch with that
+        initial state (rows without one start from zero).
         """
         if return_states is None:
-            return_states = self._w_out is None
+            return_states = not self.has_readout
         fn = self.rollout if return_states else self.predictions
         bucketer = bucketer or PaddingBucketer()
         results = {}
         for mb in bucketer.group(list(requests)):
-            out = fn(jnp.asarray(mb.inputs), real_steps=mb.real_steps)
+            out = fn(jnp.asarray(mb.inputs), x0=mb.x0,
+                     real_steps=mb.real_steps)
             for j, req in enumerate(mb.requests):
                 results[req.uid] = out[j, :req.length]
         return results

@@ -1,0 +1,247 @@
+"""Continuous-batching scheduler: decode-style admission for rollouts.
+
+One-shot ``ReservoirEngine.serve()`` takes a fully-formed request list,
+pads it, and blocks until the whole group is rolled.  Under streaming
+arrivals that wastes time twice: the batch cannot start until its last
+request exists, and every sequence is padded to the group's length bucket.
+This module serves the same requests decode-style instead:
+
+* a fixed pool of **batch slots** (the compiled batch dimension never
+  changes, so the engine reuses one program for every chunk),
+* the engine runs in fixed ``chunk_steps`` segments, and between chunks
+  finished sequences **retire** and queued ones are **admitted mid-flight**,
+* each live slot's reservoir state is carried across chunks through the
+  engine's ``return_final_state`` chunk API, so the chunked trajectory is
+  bit-identical to a one-shot rollout of the same inputs — the recurrence
+  is stateful per sequence, which is exactly what makes reservoir
+  continuous batching more than prompt re-padding.
+
+:class:`ContinuousBatcher` owns the slot pool mechanics;
+:class:`AsyncReservoirServer` adds the time-stamped arrival queue, the
+virtual clock, and queue-wait / time-to-first-prediction / slot-occupancy
+telemetry on :class:`~repro.serve.stats.ServeStats`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.batching import RolloutRequest
+from repro.serve.stats import ServeStats
+
+
+@dataclasses.dataclass
+class QueuedRequest:
+    """A :class:`RolloutRequest` plus its arrival time and lifecycle marks.
+
+    The scheduler fills the ``*_time`` fields as the request moves through
+    the system (all on the server's clock): ``admit_time`` when it takes a
+    slot, ``first_output_time`` when its first chunk of predictions is
+    ready, ``finish_time`` when it retires.
+    """
+
+    request: RolloutRequest
+    arrival_time: float = 0.0
+    seq: int = 0                         # submission index; FIFO tiebreak
+    admit_time: float | None = None
+    first_output_time: float | None = None
+    finish_time: float | None = None
+
+    @property
+    def uid(self) -> Any:
+        return self.request.uid
+
+    @property
+    def length(self) -> int:
+        return self.request.length
+
+
+class ContinuousBatcher:
+    """A fixed pool of batch slots rolled forward ``chunk_steps`` at a time.
+
+    Every chunk is ONE engine call of the static shape
+    ``(n_slots, chunk_steps, input_dim)`` — free slots ride along as zero
+    rows — with the pool's reservoir states passed as ``x0`` and the
+    post-chunk states carried via ``return_final_state``.  Rows are
+    independent through the recurrence (the batched matmuls and the
+    elementwise epilogue never mix rows), so a sequence's chunked
+    trajectory equals its one-shot rollout bit for bit.
+    """
+
+    def __init__(self, engine, *, n_slots: int = 8, chunk_steps: int = 16,
+                 return_states: bool | None = None):
+        assert n_slots >= 1 and chunk_steps >= 1
+        self.engine = engine
+        self.n_slots = n_slots
+        self.chunk_steps = chunk_steps
+        if return_states is None:
+            return_states = not engine.has_readout
+        self.return_states = return_states
+        self._in_dim = engine.config.input_dim
+        self._dim = engine.config.reservoir_dim
+        self._slots: list[QueuedRequest | None] = [None] * n_slots
+        self._pos = [0] * n_slots               # steps consumed per slot
+        self._chunks: list[list] = [[] for _ in range(n_slots)]
+        self._states = jnp.zeros((n_slots, self._dim), jnp.float32)
+
+    @property
+    def live(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    def has_free_slot(self) -> bool:
+        return any(s is None for s in self._slots)
+
+    def admit(self, qreq: QueuedRequest) -> int:
+        """Seat a request in a free slot (zero state, or its ``x0``)."""
+        slot = self._slots.index(None)
+        self._slots[slot] = qreq
+        self._pos[slot] = 0
+        self._chunks[slot] = []
+        x0 = qreq.request.x0
+        row = (jnp.zeros((self._dim,), jnp.float32) if x0 is None
+               else jnp.asarray(x0, jnp.float32))
+        self._states = self._states.at[slot].set(row)
+        return slot
+
+    def run_chunk(self) -> tuple[list[tuple[QueuedRequest, np.ndarray]], int]:
+        """Roll every slot ``chunk_steps`` forward.
+
+        Returns ``(retired, real_steps)``: each retiree is
+        ``(qreq, output)`` with the full (T_request, O/R) output assembled
+        from its chunks, and ``real_steps`` counts the input steps the
+        chunk actually consumed (seated slots' remaining lengths, capped
+        at ``chunk_steps`` — the occupancy numerator).  Sequences that
+        finish inside the chunk stop accumulating output at their real
+        length (the recurrence is causal, so the zero-padded tail steps
+        cannot reach them).
+        """
+        cs = self.chunk_steps
+        u = np.zeros((self.n_slots, cs, self._in_dim), np.float32)
+        take: dict[int, int] = {}
+        for i, q in enumerate(self._slots):
+            if q is None:
+                continue
+            seg = np.asarray(q.request.inputs[self._pos[i]:self._pos[i] + cs],
+                             np.float32)
+            u[i, :len(seg)] = seg
+            take[i] = len(seg)
+        fn = (self.engine.rollout if self.return_states
+              else self.engine.predictions)
+        out, xf = fn(jnp.asarray(u), x0=self._states,
+                     real_steps=sum(take.values()), return_final_state=True)
+        out = np.asarray(out)
+        self._states = xf
+        retired = []
+        for i, n in take.items():
+            q = self._slots[i]
+            # copy: a bare out[i, :n] view would pin the whole
+            # (n_slots, chunk_steps, O) chunk buffer until retirement
+            self._chunks[i].append(out[i, :n].copy())
+            self._pos[i] += n
+            if self._pos[i] >= q.length:
+                retired.append((q, np.concatenate(self._chunks[i], axis=0)))
+                self._slots[i] = None
+                self._chunks[i] = []
+        return retired, sum(take.values())
+
+
+class AsyncReservoirServer:
+    """Time-stamped request queue in front of a :class:`ContinuousBatcher`.
+
+    ``submit()`` enqueues requests with arrival timestamps;  ``run()``
+    (or repeated ``step()`` calls) drains the queue: admit every arrived
+    request that fits the pool, roll one chunk, retire finished sequences,
+    repeat.  Admission is strictly FIFO in (arrival_time, submission
+    order).
+
+    The server keeps a virtual clock ``now``: it advances by each chunk's
+    measured wall time (or the fixed ``chunk_time`` if given — useful for
+    deterministic tests and trace-driven benchmarks) and jumps forward to
+    the next arrival when the pool runs empty.  Queue waits,
+    time-to-first-prediction and slot occupancy land in ``stats``.
+    """
+
+    def __init__(self, engine, *, n_slots: int = 8, chunk_steps: int = 16,
+                 return_states: bool | None = None,
+                 stats: ServeStats | None = None,
+                 chunk_time: float | None = None):
+        self.batcher = ContinuousBatcher(engine, n_slots=n_slots,
+                                         chunk_steps=chunk_steps,
+                                         return_states=return_states)
+        self.stats = stats if stats is not None else engine.stats
+        self.chunk_time = chunk_time
+        self.now = 0.0
+        self.results: dict[Any, np.ndarray] = {}
+        self._queue: list[tuple[float, int, QueuedRequest]] = []
+        self._seq = 0
+
+    # -- queue ---------------------------------------------------------------
+    def submit(self, request: RolloutRequest,
+               arrival_time: float | None = None) -> QueuedRequest:
+        """Enqueue one request; ``arrival_time`` defaults to ``now``."""
+        at = self.now if arrival_time is None else float(arrival_time)
+        qreq = QueuedRequest(request, arrival_time=at, seq=self._seq)
+        self._seq += 1
+        heapq.heappush(self._queue, (at, qreq.seq, qreq))
+        self.stats.record_enqueue()
+        return qreq
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def drained(self) -> bool:
+        return not self._queue and self.batcher.live == 0
+
+    def _admit_arrived(self) -> None:
+        while (self._queue and self.batcher.has_free_slot()
+               and self._queue[0][0] <= self.now):
+            _, _, qreq = heapq.heappop(self._queue)
+            qreq.admit_time = self.now
+            self.stats.record_admission(self.now - qreq.arrival_time)
+            self.batcher.admit(qreq)
+
+    # -- event loop ----------------------------------------------------------
+    def step(self) -> bool:
+        """Admit + one chunk + retire.  Returns False once drained."""
+        if self.drained:
+            return False
+        if self.batcher.live == 0 and self._queue:
+            # pool idle: fast-forward the clock to the next arrival
+            self.now = max(self.now, self._queue[0][0])
+        self._admit_arrived()
+        t0 = time.perf_counter()
+        retired, real_steps = self.batcher.run_chunk()
+        self.now += (time.perf_counter() - t0 if self.chunk_time is None
+                     else self.chunk_time)
+        self.stats.record_chunk(
+            live_steps=real_steps,
+            total_steps=self.batcher.n_slots * self.batcher.chunk_steps)
+        for qreq, out in retired:
+            qreq.finish_time = self.now
+            self.results[qreq.uid] = out
+            self.stats.record_completion()
+        # first-output marks: every seated-or-just-retired request that has
+        # produced output by the end of this chunk
+        for qreq in list(self.batcher._slots) + [q for q, _ in retired]:
+            if (qreq is not None and qreq.first_output_time is None
+                    and qreq.admit_time is not None):
+                qreq.first_output_time = self.now
+                self.stats.record_first_output(self.now - qreq.arrival_time)
+        return True
+
+    def run(self) -> dict:
+        """Drain the queue; returns {uid: (T_request, O or R) output}."""
+        while self.step():
+            pass
+        return self.results
+
+
+__all__ = ["QueuedRequest", "ContinuousBatcher", "AsyncReservoirServer"]

@@ -20,6 +20,19 @@ class ServeStats:
     steps_padded: int = 0          # steps actually executed
     seconds: float = 0.0           # wall time spent in rollouts
     latency_ewma_s: float = 0.0    # smoothed per-call latency
+    # continuous-batching telemetry (AsyncReservoirServer), all on the
+    # server's clock: queue waits, time-to-first-prediction, and how full
+    # the slot pool ran.
+    enqueued: int = 0              # requests submitted to the queue
+    admitted: int = 0              # requests seated in a slot
+    completed: int = 0             # requests fully served
+    chunks: int = 0                # scheduler chunks executed
+    queue_wait_s: float = 0.0      # summed arrival -> admission wait
+    queue_wait_max_s: float = 0.0
+    ttfp_s: float = 0.0            # summed arrival -> first prediction
+    ttfp_max_s: float = 0.0
+    slot_steps_live: int = 0       # chunk steps that consumed real input
+    slot_steps_total: int = 0      # chunk steps across the whole pool
     _EWMA_ALPHA = 0.2
 
     def record_call(self, *, batch: int, steps: int, seconds: float,
@@ -36,6 +49,32 @@ class ServeStats:
         else:
             a = self._EWMA_ALPHA
             self.latency_ewma_s = a * seconds + (1 - a) * self.latency_ewma_s
+
+    # -- continuous-batching accounting --------------------------------------
+    def record_enqueue(self) -> None:
+        self.enqueued += 1
+
+    def record_admission(self, wait_s: float) -> None:
+        """One request seated; ``wait_s`` is its arrival -> admit wait."""
+        self.admitted += 1
+        self.queue_wait_s += wait_s
+        self.queue_wait_max_s = max(self.queue_wait_max_s, wait_s)
+
+    def record_first_output(self, ttfp_s: float) -> None:
+        """First chunk of output ready, ``ttfp_s`` after the arrival."""
+        self.ttfp_s += ttfp_s
+        self.ttfp_max_s = max(self.ttfp_max_s, ttfp_s)
+
+    def record_completion(self) -> None:
+        self.completed += 1
+
+    def record_chunk(self, *, live_steps: int, total_steps: int) -> None:
+        """One scheduler chunk: ``live_steps`` of the pool's
+        ``total_steps`` executed steps consumed real request input (a
+        retiring sequence's zero-padded tail does not count)."""
+        self.chunks += 1
+        self.slot_steps_live += live_steps
+        self.slot_steps_total += total_steps
 
     @property
     def steps_per_sec(self) -> float:
@@ -54,8 +93,25 @@ class ServeStats:
             return 1.0
         return self.steps_real / self.steps_padded
 
+    @property
+    def mean_queue_wait_s(self) -> float:
+        """Mean arrival -> admission wait across admitted requests."""
+        return self.queue_wait_s / self.admitted if self.admitted else 0.0
+
+    @property
+    def mean_ttfp_s(self) -> float:
+        """Mean arrival -> first-prediction latency."""
+        return self.ttfp_s / self.admitted if self.admitted else 0.0
+
+    @property
+    def slot_occupancy(self) -> float:
+        """Fraction of pool chunk-steps that consumed real request input."""
+        if self.slot_steps_total == 0:
+            return 1.0
+        return self.slot_steps_live / self.slot_steps_total
+
     def summary(self) -> dict:
-        return {
+        out = {
             "calls": self.calls,
             "sequences": self.sequences,
             "steps_real": self.steps_real,
@@ -66,12 +122,33 @@ class ServeStats:
             "padding_efficiency": self.padding_efficiency,
             "latency_ewma_ms": self.latency_ewma_s * 1e3,
         }
+        if self.enqueued:
+            out.update({
+                "enqueued": self.enqueued,
+                "admitted": self.admitted,
+                "completed": self.completed,
+                "chunks": self.chunks,
+                "mean_queue_wait_ms": self.mean_queue_wait_s * 1e3,
+                "max_queue_wait_ms": self.queue_wait_max_s * 1e3,
+                "mean_ttfp_ms": self.mean_ttfp_s * 1e3,
+                "max_ttfp_ms": self.ttfp_max_s * 1e3,
+                "slot_occupancy": self.slot_occupancy,
+            })
+        return out
 
     def render(self) -> str:
         s = self.summary()
-        return (f"{s['calls']} calls, {s['sequences']} seqs, "
+        line = (f"{s['calls']} calls, {s['sequences']} seqs, "
                 f"{s['steps_real']} steps "
                 f"({s['padding_efficiency']:.0%} of executed work useful), "
                 f"{s['steps_per_sec']:.0f} steps/s raw, "
                 f"{s['goodput_steps_per_sec']:.0f} steps/s goodput, "
                 f"p-call latency {s['latency_ewma_ms']:.2f} ms (ewma)")
+        if self.enqueued:
+            line += (f"; queue: {s['completed']}/{s['enqueued']} done in "
+                     f"{s['chunks']} chunks, "
+                     f"wait {s['mean_queue_wait_ms']:.2f} ms mean / "
+                     f"{s['max_queue_wait_ms']:.2f} ms max, "
+                     f"ttfp {s['mean_ttfp_ms']:.2f} ms mean, "
+                     f"occupancy {s['slot_occupancy']:.0%}")
+        return line

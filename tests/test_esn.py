@@ -87,3 +87,42 @@ class TestESN:
                         block=32)
         p = init_esn(cfg)
         assert abs(p.w.element_sparsity - 0.9) < 0.03
+
+
+class TestBatchedWashout:
+    """Regression: washout must trim each sequence's transient, not just
+    the head of the flattened (B*T, R) array."""
+
+    def _batched(self, b=3, t=40, seed=6):
+        cfg = ESNConfig(reservoir_dim=64, element_sparsity=0.8, seed=seed,
+                        block=32, output_dim=2)
+        p = init_esn(cfg)
+        rng = np.random.default_rng(seed)
+        u = jnp.asarray(rng.standard_normal((b, t, 1)), jnp.float32)
+        states = run_reservoir(p, u, engine="scan")
+        y = jnp.asarray(rng.standard_normal((b, t, 2)), jnp.float32)
+        return p, states, y
+
+    def test_batched_washout_matches_per_sequence_fit(self):
+        p, states, y = self._batched()
+        washed = fit_readout(p, states, y, lam=1e-3, washout=10)
+        # reference: trim every sequence by hand, then fit with washout=0
+        manual = fit_readout(p, states[:, 10:], y[:, 10:], lam=1e-3)
+        np.testing.assert_allclose(np.asarray(washed.w_out),
+                                   np.asarray(manual.w_out),
+                                   rtol=1e-5, atol=1e-6)
+        # and differs from the old buggy flattened-head trim
+        b, t, r = states.shape
+        flat_s = states.reshape(-1, r)[10:]
+        flat_y = y.reshape(-1, y.shape[-1])[10:]
+        buggy = fit_readout(p, flat_s, flat_y, lam=1e-3)
+        assert np.abs(np.asarray(washed.w_out)
+                      - np.asarray(buggy.w_out)).max() > 1e-6
+
+    def test_unbatched_washout_semantics_unchanged(self):
+        p, states, y = self._batched(b=1)
+        single = fit_readout(p, states[0], y[0], lam=1e-3, washout=10)
+        manual = fit_readout(p, states[0, 10:], y[0, 10:], lam=1e-3)
+        np.testing.assert_allclose(np.asarray(single.w_out),
+                                   np.asarray(manual.w_out),
+                                   rtol=1e-6, atol=1e-7)

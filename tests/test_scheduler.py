@@ -1,0 +1,294 @@
+"""Continuous-batching scheduler: slot pool, admission, chunked parity.
+
+The load-bearing contract is the acceptance criterion: a chunked
+scheduler rollout — slot pool, ``chunk_steps`` segments, reservoir state
+carried between chunks — must be *bit-identical* to the one-shot engine
+rollout of the same inputs, for states and for fused-readout
+predictions, on both backends.  Bit-identity holds when the batch shapes
+match (the pool rolls a fixed ``(n_slots, chunk_steps, I)`` shape and
+rows never mix), so those tests pin ``n_slots`` to the request count.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.esn import (ESNConfig, fit_readout, init_esn, run_reservoir)
+from repro.serve import (AsyncReservoirServer, ContinuousBatcher,
+                         ReservoirEngine, RolloutRequest, ServeStats)
+
+
+def _params(mode="fp32", dim=96, leak=0.7, seed=1, block=32, trained=True):
+    cfg = ESNConfig(reservoir_dim=dim, element_sparsity=0.8, mode=mode,
+                    leak=leak, seed=seed, block=block, output_dim=2)
+    p = init_esn(cfg)
+    if trained:
+        rng = np.random.default_rng(seed)
+        u = jnp.asarray(rng.standard_normal((50, 1)), jnp.float32)
+        states = run_reservoir(p, u, engine="scan")
+        y = jnp.concatenate([u, jnp.roll(u, 1)], axis=-1)
+        p = fit_readout(p, states, y, lam=1e-2)
+    return p
+
+
+def _requests(lengths, seed=0, in_dim=1):
+    rng = np.random.default_rng(seed)
+    return [RolloutRequest(
+                uid=i,
+                inputs=rng.standard_normal((t, in_dim)).astype(np.float32))
+            for i, t in enumerate(lengths)]
+
+
+def _server(p, backend="xla", **kw):
+    eng = ReservoirEngine(p, backend=backend, stats=ServeStats())
+    kw.setdefault("chunk_time", 1.0)        # deterministic virtual clock
+    return eng, AsyncReservoirServer(eng, **kw)
+
+
+class TestEngineChunkAPI:
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_final_state_is_last_state(self, backend):
+        p = _params(trained=False)
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.standard_normal((3, 8, 1)), jnp.float32)
+        states, xf = ReservoirEngine(p, backend=backend).rollout(
+            u, return_final_state=True)
+        np.testing.assert_array_equal(np.asarray(xf),
+                                      np.asarray(states)[:, -1])
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_chunk_resume_bit_identical(self, backend):
+        p = _params()
+        eng = ReservoirEngine(p, backend=backend)
+        rng = np.random.default_rng(1)
+        u = jnp.asarray(rng.standard_normal((2, 16, 1)), jnp.float32)
+        full = np.asarray(eng.rollout(u))
+        s1, xf = eng.rollout(u[:, :8], return_final_state=True)
+        s2 = eng.rollout(u[:, 8:], x0=xf)
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(s1), np.asarray(s2)], axis=1), full)
+        pfull = np.asarray(eng.predictions(u))
+        p1, xf = eng.predictions(u[:, :8], return_final_state=True)
+        p2 = eng.predictions(u[:, 8:], x0=xf)
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(p1), np.asarray(p2)], axis=1), pfull)
+
+    def test_single_sequence_final_state_shape(self):
+        p = _params(trained=False)
+        states, xf = ReservoirEngine(p).rollout(
+            jnp.ones((10, 1), jnp.float32), return_final_state=True)
+        assert states.shape == (10, 96) and xf.shape == (96,)
+
+
+class TestChunkedParity:
+    """Acceptance: chunked scheduler == one-shot engine, bit for bit."""
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    @pytest.mark.parametrize("return_states", [True, False])
+    def test_scheduler_bit_identical_to_one_shot(self, backend,
+                                                 return_states):
+        p = _params(mode="fp32")
+        eng = ReservoirEngine(p, backend=backend, stats=ServeStats())
+        n, t = 4, 24
+        reqs = _requests([t] * n, seed=2)
+        srv = AsyncReservoirServer(eng, n_slots=n, chunk_steps=8,
+                                   return_states=return_states,
+                                   chunk_time=1.0)
+        for r in reqs:
+            srv.submit(r, arrival_time=0.0)
+        res = srv.run()
+        batch = jnp.asarray(np.stack([r.inputs for r in reqs]))
+        one_shot = np.asarray(eng.rollout(batch) if return_states
+                              else eng.predictions(batch))
+        for i, r in enumerate(reqs):
+            np.testing.assert_array_equal(res[r.uid], one_shot[i])
+
+    def test_int8_scheduler_bit_identical(self):
+        p = _params(mode="int8-csd")
+        eng = ReservoirEngine(p, stats=ServeStats())
+        reqs = _requests([16, 16], seed=3)
+        srv = AsyncReservoirServer(eng, n_slots=2, chunk_steps=4,
+                                   chunk_time=1.0)
+        for r in reqs:
+            srv.submit(r)
+        res = srv.run()
+        batch = jnp.asarray(np.stack([r.inputs for r in reqs]))
+        one_shot = np.asarray(eng.predictions(batch))
+        for i, r in enumerate(reqs):
+            np.testing.assert_array_equal(res[r.uid], one_shot[i])
+
+    def test_ragged_lengths_match_per_request_rollout(self):
+        """Mixed lengths + mid-chunk retirement: allclose vs the engine's
+        own per-request rollout (batch shape differs, so fp accumulation
+        may differ by ~1 ulp)."""
+        p = _params()
+        eng = ReservoirEngine(p, stats=ServeStats())
+        reqs = _requests([5, 17, 30, 9, 12, 23], seed=4)
+        srv = AsyncReservoirServer(eng, n_slots=3, chunk_steps=8,
+                                   chunk_time=1.0)
+        for i, r in enumerate(reqs):
+            srv.submit(r, arrival_time=0.5 * i)
+        res = srv.run()
+        for r in reqs:
+            want = np.asarray(eng.predictions(jnp.asarray(r.inputs)))
+            np.testing.assert_allclose(res[r.uid], want,
+                                       rtol=1e-4, atol=1e-6)
+
+
+class TestAdmission:
+    def test_fifo_under_full_pool(self):
+        """More arrivals than slots: seats are granted strictly in
+        (arrival_time, submission) order as they free up."""
+        p = _params()
+        eng, srv = _server(p, n_slots=2, chunk_steps=8)
+        qreqs = [srv.submit(r, arrival_time=0.0)
+                 for r in _requests([8] * 5, seed=5)]
+        srv.run()
+        admits = [q.admit_time for q in qreqs]
+        assert admits == sorted(admits)
+        # exactly the pool width is seated at t=0; the rest wait
+        assert admits[0] == admits[1] == 0.0
+        assert all(a > 0.0 for a in admits[2:])
+        finishes = [q.finish_time for q in qreqs]
+        assert finishes == sorted(finishes)
+        assert eng.stats.admitted == 5 and eng.stats.completed == 5
+
+    def test_late_arrival_not_admitted_early(self):
+        p = _params()
+        _, srv = _server(p, n_slots=2, chunk_steps=8)
+        early = srv.submit(_requests([8], seed=6)[0], arrival_time=0.0)
+        late = srv.submit(
+            RolloutRequest(uid="late", inputs=np.ones((8, 1), np.float32)),
+            arrival_time=10.0)
+        srv.run()
+        assert early.admit_time == 0.0
+        # pool was free the whole time — the clock, not capacity, gated it
+        assert late.admit_time >= 10.0
+
+    def test_mid_flight_admit_with_zero_state(self):
+        """A request seated while another sequence is mid-rollout starts
+        from the zero state and serves correctly."""
+        p = _params()
+        eng = ReservoirEngine(p, stats=ServeStats())
+        srv = AsyncReservoirServer(eng, n_slots=2, chunk_steps=8,
+                                   chunk_time=1.0)
+        long = srv.submit(RolloutRequest(
+            uid="long", inputs=np.ones((40, 1), np.float32)),
+            arrival_time=0.0)
+        short = srv.submit(RolloutRequest(
+            uid="short", inputs=np.ones((8, 1), np.float32)),
+            arrival_time=0.0)
+        mid = srv.submit(RolloutRequest(
+            uid="mid", inputs=np.full((8, 1), 0.5, np.float32)),
+            arrival_time=1.5)
+        res = srv.run()
+        # "mid" was seated after "short" retired, while "long" was live
+        assert mid.admit_time > 0.0
+        assert mid.admit_time < long.finish_time
+        want = np.asarray(eng.predictions(
+            jnp.full((8, 1), 0.5, jnp.float32)))
+        np.testing.assert_allclose(res["mid"], want, rtol=1e-4, atol=1e-6)
+
+    def test_request_x0_seeds_slot_state(self):
+        p = _params()
+        eng = ReservoirEngine(p, stats=ServeStats())
+        srv = AsyncReservoirServer(eng, n_slots=1, chunk_steps=8,
+                                   chunk_time=1.0)
+        x0 = np.full((96,), 0.2, np.float32)
+        u = np.ones((8, 1), np.float32)
+        srv.submit(RolloutRequest(uid=0, inputs=u, x0=x0))
+        res = srv.run()
+        want = np.asarray(eng.predictions(
+            jnp.asarray(u)[None], x0=jnp.asarray(x0)[None]))[0]
+        np.testing.assert_array_equal(res[0], want)
+
+
+class TestQueueStats:
+    def test_queue_wait_and_ttfp_accounting(self):
+        """Virtual clock with chunk_time=1: waits are exact integers."""
+        p = _params()
+        eng, srv = _server(p, n_slots=1, chunk_steps=8)
+        q0 = srv.submit(_requests([8], seed=7)[0], arrival_time=0.0)
+        q1 = srv.submit(
+            RolloutRequest(uid=1, inputs=np.ones((8, 1), np.float32)),
+            arrival_time=0.0)
+        srv.run()
+        s = eng.stats
+        # q0 seats immediately; q1 waits one full chunk for the slot
+        assert (q0.admit_time, q1.admit_time) == (0.0, 1.0)
+        assert s.queue_wait_max_s == pytest.approx(1.0)
+        assert s.mean_queue_wait_s == pytest.approx(0.5)
+        # first predictions land at the end of each request's first chunk
+        assert q0.first_output_time == pytest.approx(1.0)
+        assert q1.first_output_time == pytest.approx(2.0)
+        assert s.mean_ttfp_s == pytest.approx(1.5)
+        assert s.ttfp_max_s == pytest.approx(2.0)
+        assert s.enqueued == 2 and s.admitted == 2 and s.completed == 2
+        assert s.chunks == 2 and s.slot_occupancy == pytest.approx(1.0)
+
+    def test_idle_pool_fast_forwards_clock(self):
+        p = _params()
+        eng, srv = _server(p, n_slots=2, chunk_steps=8)
+        q = srv.submit(_requests([8], seed=8)[0], arrival_time=7.25)
+        srv.run()
+        # no queue wait: the server jumped to the arrival instead of
+        # charging idle time against the request
+        assert q.admit_time == pytest.approx(7.25)
+        assert eng.stats.queue_wait_max_s == pytest.approx(0.0)
+        assert srv.now == pytest.approx(8.25)
+
+    def test_occupancy_reflects_free_slots(self):
+        p = _params()
+        eng, srv = _server(p, n_slots=4, chunk_steps=8)
+        srv.submit(_requests([8], seed=9)[0], arrival_time=0.0)
+        srv.run()
+        # one live slot of four for the single chunk
+        assert eng.stats.slot_occupancy == pytest.approx(0.25)
+        assert "occupancy" in eng.stats.render()
+        assert "slot_occupancy" in eng.stats.summary()
+
+    def test_occupancy_discounts_retiring_tail(self):
+        """A sequence that finishes mid-chunk only counts its real steps —
+        the zero-padded tail of its final chunk is not 'live' work."""
+        p = _params()
+        eng, srv = _server(p, n_slots=1, chunk_steps=16)
+        srv.submit(_requests([4], seed=12)[0], arrival_time=0.0)
+        srv.run()
+        assert eng.stats.slot_occupancy == pytest.approx(4 / 16)
+
+    def test_results_and_drained_flag(self):
+        p = _params()
+        _, srv = _server(p, n_slots=2, chunk_steps=8)
+        assert srv.drained and not srv.step()
+        srv.submit(_requests([4], seed=10)[0])
+        assert not srv.drained
+        res = srv.run()
+        assert srv.drained and set(res) == {0}
+        assert res[0].shape == (4, 2)
+
+
+class TestContinuousBatcherUnit:
+    def test_slot_reuse_and_retire(self):
+        p = _params()
+        eng = ReservoirEngine(p, stats=ServeStats())
+        cb = ContinuousBatcher(eng, n_slots=2, chunk_steps=4)
+        from repro.serve.scheduler import QueuedRequest
+        a = QueuedRequest(RolloutRequest(
+            uid="a", inputs=np.ones((4, 1), np.float32)))
+        b = QueuedRequest(RolloutRequest(
+            uid="b", inputs=np.ones((12, 1), np.float32)))
+        assert cb.admit(a) == 0 and cb.admit(b) == 1
+        assert not cb.has_free_slot() and cb.live == 2
+        retired, real = cb.run_chunk()
+        assert [q.uid for q, _ in retired] == ["a"]
+        assert real == 8                        # both slots fully live
+        assert cb.has_free_slot() and cb.live == 1
+        c = QueuedRequest(RolloutRequest(
+            uid="c", inputs=np.ones((4, 1), np.float32)))
+        assert cb.admit(c) == 0                 # freed slot is reused
+        retired, real = cb.run_chunk()
+        assert [q.uid for q, _ in retired] == ["c"]
+        retired, real = cb.run_chunk()
+        (qb, out_b), = retired
+        assert qb.uid == "b" and out_b.shape == (12, 2)
+        assert real == 4                        # b's last 4 of 12 steps

@@ -42,6 +42,16 @@ class TestPaddingBucketer:
         assert b.pad_batch(3) == 4
         assert b.pad_batch(8) == 8
 
+    def test_pad_batch_rounds_up_past_top_bucket(self):
+        """Regression: beyond the top bucket the batch must round *up* to
+        a multiple of it — never hand back a buffer smaller than the
+        batch."""
+        b = PaddingBucketer(len_buckets=(16,), batch_buckets=(1, 2, 4, 8))
+        assert b.pad_batch(9) == 16
+        assert b.pad_batch(16) == 16
+        assert b.pad_batch(17) == 24
+        assert all(b.pad_batch(n) >= n for n in range(1, 40))
+
     def test_group_shapes_and_padding(self):
         b = PaddingBucketer(len_buckets=(8, 16), batch_buckets=(1, 2, 4))
         rng = np.random.default_rng(0)
@@ -219,6 +229,35 @@ class TestServeRequests:
         want = np.asarray(predict(p, run_reservoir(p, u, engine="scan")))
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
 
+
+    def test_serve_honors_request_x0(self):
+        """Regression: serve() used to drop initial state — a request's
+        x0 must seed its row of the padded batch."""
+        p = _params(dim=64, block=32, seed=11)
+        eng = ReservoirEngine(p)
+        rng = np.random.default_rng(11)
+        u0 = rng.standard_normal((8, 1)).astype(np.float32)
+        u1 = rng.standard_normal((8, 1)).astype(np.float32)
+        x0 = rng.uniform(-0.4, 0.4, (64,)).astype(np.float32)
+        bucketer = PaddingBucketer(len_buckets=(8,), batch_buckets=(2,))
+        res = eng.serve([RolloutRequest(uid=0, inputs=u0),
+                         RolloutRequest(uid=1, inputs=u1, x0=x0)],
+                        bucketer=bucketer)
+        # bit-identical to the same batched rollout with the x0 row seeded
+        x0b = np.zeros((2, 64), np.float32)
+        x0b[1] = x0
+        want = np.asarray(eng.rollout(jnp.asarray(np.stack([u0, u1])),
+                                      x0=jnp.asarray(x0b)))
+        np.testing.assert_array_equal(np.asarray(res[0]), want[0])
+        np.testing.assert_array_equal(np.asarray(res[1]), want[1])
+        # requests without x0 still start from zero
+        plain = eng.serve([RolloutRequest(uid=0, inputs=u0)],
+                          bucketer=PaddingBucketer(len_buckets=(8,),
+                                                   batch_buckets=(1,)))
+        np.testing.assert_allclose(
+            np.asarray(plain[0]),
+            np.asarray(eng.rollout(jnp.asarray(u0))),
+            rtol=1e-5, atol=1e-6)
 
     def test_padding_overhead_lands_in_stats(self):
         p = _params(dim=64, block=32)
