@@ -520,6 +520,125 @@ def serve_queue():
     })
 
 
+def _serve_sharded_measure() -> list:
+    """Measure the sharded-serving goodput win on a Poisson trace.
+
+    Requires >= 8 jax devices (virtual host devices in CI).  The clock is
+    the scheduler's *device-parallel* virtual clock: one pool chunk costs
+    one measured per-shard chunk time — the (slots_per_shard, chunk_steps)
+    rollout on a single device — because on real hardware the shards run
+    concurrently on their own devices, which 8 virtual CPU devices
+    time-slicing one socket cannot show directly.  The arrival rate is
+    calibrated to ~75% of the 8-shard pool's modeled service rate, so the
+    single-shard pool is ~6x oversubscribed and pays the queueing delay
+    the extra shards exist to absorb.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.dist import DistributedReservoirServer, ShardedReservoirEngine
+    from repro.serve import RolloutRequest, ServeStats
+
+    assert len(jax.devices()) >= 8, "serve_sharded needs 8 devices"
+    # the trace must be long relative to the drain tail (a request is at
+    # most 64/chunk_steps = 4 chunks long) or the tail after the last
+    # arrival, which both pool sizes pay equally, compresses the ratio
+    dim = 256 if FAST else 512
+    n_req = 160 if FAST else 288
+    sps = 8                                     # slots per shard
+    cs = 16                                     # chunk steps
+    out_dim = 4
+    params = _serve_params(dim, "fp32", seed=5)
+    rng = np.random.default_rng(5)
+    params.w_out = jnp.asarray(
+        rng.uniform(-0.1, 0.1, (dim, out_dim)), jnp.float32)
+
+    lengths = rng.integers(8, 65, n_req)
+    reqs = [RolloutRequest(
+                uid=i,
+                inputs=rng.standard_normal((int(t), 4)).astype(np.float32))
+            for i, t in enumerate(lengths)]
+    total_steps = int(lengths.sum())
+
+    # per-shard chunk cost, measured on one device at the sub-pool shape
+    eng1 = ShardedReservoirEngine(params, n_shards=1, stats=ServeStats())
+    warm = jnp.asarray(rng.standard_normal((sps, cs, 4)), jnp.float32)
+    t_chunk = _time_rollout(
+        lambda: jax.block_until_ready(
+            eng1.predictions(warm, return_final_state=True)[0]), 3)
+    rate8 = 8 * sps * cs / t_chunk              # modeled pool steps/s
+    gaps = rng.exponential(float(np.mean(lengths)) / (0.75 * rate8), n_req)
+    arrivals = np.cumsum(gaps) - gaps[0]
+
+    rows = []
+    goodputs = {}
+    for n_shards in (1, 8):
+        # reuse the calibration engine for the 1-shard run — same compiled
+        # shard_map program, no second XLA compile
+        engine = eng1 if n_shards == 1 else ShardedReservoirEngine(
+            params, n_shards=n_shards, stats=ServeStats())
+        srv = DistributedReservoirServer(engine, slots_per_shard=sps,
+                                         chunk_steps=cs, chunk_time=t_chunk,
+                                         stats=ServeStats())
+        for r, at in zip(reqs, arrivals):
+            srv.submit(r, arrival_time=float(at))
+        srv.run()
+        makespan = srv.now
+        goodputs[n_shards] = total_steps / makespan
+        merged = srv.shard_summary()
+        rows.append({
+            "family": "serve_sharded",
+            "mode": "fp32", "dim": dim, "batch": n_shards * sps,
+            "n_shards": n_shards, "slots_per_shard": sps,
+            "chunk_steps": cs, "requests": n_req,
+            "total_steps": total_steps,
+            "arrival_span_s": float(arrivals[-1]),
+            "chunk_time_s": t_chunk,
+            "backend": "xla",
+            "goodput_steps_per_sec": goodputs[n_shards],
+            "makespan_s": makespan,
+            "slot_occupancy": merged.slot_occupancy,
+            "completed": merged.completed,
+            "speedup": goodputs[n_shards] / goodputs[1],
+        })
+    return rows
+
+
+def serve_sharded():
+    """Sharded continuous batching: 8 data shards vs 1 on one trace.
+
+    The measurement needs >= 8 devices; when the current process has
+    fewer (the usual single-device CPU run), it re-runs itself in a
+    subprocess with 8 virtual host devices — forcing the flag here would
+    re-partition the whole process's CPU and distort every other family's
+    timings.
+    """
+    import jax
+    if len(jax.devices()) >= 8:
+        rows = _serve_sharded_measure()
+    else:
+        import os
+        import pathlib
+        import subprocess
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                            + env.get("XLA_FLAGS", "")).strip()
+        cmd = [sys.executable, "-m", "benchmarks.run", "--sharded-child"]
+        if FAST:
+            cmd.append("--fast")
+        out = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=1200, env=env,
+            cwd=str(pathlib.Path(__file__).resolve().parent.parent))
+        assert out.returncode == 0, out.stderr[-3000:]
+        payload = out.stdout.split("SHARDED_JSON\n", 1)[1]
+        rows = json.loads(payload)
+    for r in rows:
+        emit(f"serve_sharded/fp32/dim={r['dim']}/shards={r['n_shards']}",
+             r["makespan_s"] * 1e6 / r["total_steps"],
+             f"goodput_steps_per_sec={r['goodput_steps_per_sec']:.0f};"
+             f"speedup={r['speedup']:.2f}")
+    SERVE_RESULTS.extend(rows)
+
+
 def serve_plan_stats():
     """ExecutionPlan compile stats: what the shared lowering kept/culled.
 
@@ -573,6 +692,8 @@ def _flush_serve_json():
                              "states-then-matmul two-pass",
             "serve_queue": "continuous-batching scheduler vs one-shot "
                            "serve() on a Poisson arrival trace",
+            "serve_sharded": "8-shard vs single-shard distributed serving "
+                             "on a Poisson trace (device-parallel clock)",
         },
         "fast_mode": FAST,
         "rows": SERVE_RESULTS,
@@ -593,7 +714,7 @@ ALL = [fig05_bit_sparsity, fig06_element_vs_bit_sparse, fig07_matrix_size,
        fig12_large_power, fig13_14_dim_sweep, fig15_16_sparsity_sweep,
        fig17_18_batching, fig19_20_sigma_dim, fig21_22_sigma_sparsity,
        fig23_sigma_batching, esn_quality, kernel_walltimes, serve_rollout,
-       serve_readout, serve_queue, serve_plan_stats]
+       serve_readout, serve_queue, serve_sharded, serve_plan_stats]
 
 
 def main(argv=None) -> None:
@@ -605,9 +726,18 @@ def main(argv=None) -> None:
                     help="run only families whose name contains this")
     ap.add_argument("--json-out", default=JSON_OUT,
                     help="path for the serve-family JSON results")
+    ap.add_argument("--sharded-child", action="store_true",
+                    help=argparse.SUPPRESS)  # serve_sharded subprocess mode
     args = ap.parse_args(argv)
     FAST = args.fast
     JSON_OUT = args.json_out
+    if args.sharded_child:
+        # re-invoked by serve_sharded() under 8 virtual devices: measure,
+        # dump rows after a sentinel, and exit before any CSV output
+        rows = _serve_sharded_measure()
+        print("SHARDED_JSON")
+        print(json.dumps(rows))
+        return
 
     print("name,us_per_call,derived")
     for fn in ALL:

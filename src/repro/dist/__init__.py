@@ -1,0 +1,22 @@
+"""Sharded multi-device serving: batch-axis data parallelism.
+
+The reservoir matrix is fixed and replicated (the paper's core premise),
+so scaling serving throughput is pure batch-axis data parallelism with
+zero collectives in the rollout hot loop:
+
+- ``engine``    — :class:`ShardedReservoirEngine`: the single-device
+  engine's rollout callable under ``shard_map`` over the 'data' mesh
+  axis; plan artifacts and ``W_out`` replicated, batch sharded,
+  bit-identical per sequence on both backends
+- ``scheduler`` — :class:`ShardedContinuousBatcher` (per-shard slot
+  sub-pools, least-loaded admission off one global FIFO) and
+  :class:`DistributedReservoirServer` (merged + per-shard telemetry,
+  elastic :meth:`~DistributedReservoirServer.shrink` on shard loss)
+"""
+
+from repro.dist.engine import ShardedReservoirEngine  # noqa: F401
+from repro.dist.scheduler import (DistributedReservoirServer,  # noqa: F401
+                                  ShardedContinuousBatcher)
+
+__all__ = ["ShardedReservoirEngine", "ShardedContinuousBatcher",
+           "DistributedReservoirServer"]

@@ -1,0 +1,103 @@
+"""Batch-axis sharded rollout engine: ``shard_map`` over the ``data`` mesh.
+
+The paper's throughput argument scales by *replication*: the spatial
+multiplier is a fixed circuit, so more traffic means stamping more copies
+of the same structure, never re-synthesizing it.  The TPU analogue is
+data parallelism with zero collectives in the hot loop — the
+:class:`~repro.plan.ExecutionPlan` artifacts, ``w_in`` and ``w_out`` are
+closure constants replicated once per device, and the batch axis is the
+only thing sharded.  Each shard runs the *identical* single-device rollout
+callable (:meth:`ReservoirEngine._local_rollout`) on its batch slice, so
+the sharded output is bit-identical per sequence to the single-device
+engine on both backends: rows never mix through the recurrence, and the
+per-row arithmetic is the same compiled program either way.  (One caveat,
+pinned by tests: when a shard holds a single row, XLA may lower the
+recurrent matmul as a gemv whose accumulation order differs by an ulp —
+size the batch to at least two rows per shard for exactness.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+
+from repro.launch.mesh import make_data_mesh
+from repro.parallel.sharding import (batch_spec, data_axis_names,
+                                     data_axis_size)
+from repro.plan import DEFAULT_VMEM_BUDGET
+from repro.serve.engine import DENSE_DISPATCH_DENSITY, ReservoirEngine
+from repro.serve.stats import ServeStats
+
+
+class ShardedReservoirEngine(ReservoirEngine):
+    """:class:`ReservoirEngine` with the batch dimension sharded on a mesh.
+
+    Same public API (``rollout`` / ``predictions`` / ``serve`` / the
+    ``return_final_state`` chunk API) and the same compiled per-shard
+    program; the only new behavior is batch padding up to a multiple of
+    the shard count (padded rows are zero sequences riding along in
+    otherwise-idle shard capacity, and never leave the engine).
+
+    Pass a ``mesh`` (any mesh with 'data' — and optionally 'pod' — axes)
+    or just ``n_shards`` to build a 1-D data mesh over the first N local
+    devices.
+    """
+
+    def __init__(self, params, *, mesh=None, n_shards: int | None = None,
+                 backend: str = "auto", interpret: bool = True,
+                 stats: ServeStats | None = None,
+                 dense_dispatch_density: float = DENSE_DISPATCH_DENSITY,
+                 vmem_budget: int | None = DEFAULT_VMEM_BUDGET):
+        self.mesh = mesh if mesh is not None else make_data_mesh(n_shards)
+        assert data_axis_names(self.mesh), \
+            f"mesh has no data axes: {self.mesh.axis_names}"
+        self.n_shards = data_axis_size(self.mesh)
+        self._batch_spec = batch_spec(self.mesh)
+        self.interpret = interpret
+        # kept for elastic rebuilds: shrink() must reconstruct the engine
+        # with the same dispatch policy, not the default
+        self.dense_dispatch_density = dense_dispatch_density
+        super().__init__(params, backend=backend, interpret=interpret,
+                         stats=stats,
+                         dense_dispatch_density=dense_dispatch_density,
+                         vmem_budget=vmem_budget)
+        self._sharded_fns: dict = {}
+
+    def _sharded(self, with_readout: bool, with_final: bool):
+        """jit(shard_map(local_rollout)) cached per output signature."""
+        key = (with_readout, with_final)
+        fn = self._sharded_fns.get(key)
+        if fn is None:
+            spec = self._batch_spec
+            out_specs = (spec, spec) if with_final else spec
+            # check_rep=False: the weights/plan artifacts enter as closure
+            # constants (replicated), which the replication checker cannot
+            # see through on the pallas path.
+            fn = jax.jit(shard_map(
+                self._local_rollout(with_readout, with_final),
+                mesh=self.mesh, in_specs=(spec, spec), out_specs=out_specs,
+                check_rep=False))
+            self._sharded_fns[key] = fn
+        return fn
+
+    def _dispatch(self, u, x0b, with_readout: bool, with_final: bool):
+        b = u.shape[0]
+        bpad = -(-b // self.n_shards) * self.n_shards
+        if bpad != b:
+            u = jnp.pad(u, ((0, bpad - b), (0, 0), (0, 0)))
+            x0b = jnp.pad(x0b, ((0, bpad - b), (0, 0)))
+        out = self._sharded(with_readout, with_final)(u, x0b)
+        out, xf = out if with_final else (out, None)
+        if bpad != b:
+            out = out[:b]
+            xf = None if xf is None else xf[:b]
+        return out, xf
+
+    def _record(self, out, batch, steps, t0, real_steps):
+        # account the shard-padding rows as executed-but-padded work, so
+        # padding_efficiency stays honest about the sharding overhead
+        bpad = -(-batch // self.n_shards) * self.n_shards
+        if real_steps is None:
+            real_steps = batch * steps
+        return super()._record(out, bpad, steps, t0, real_steps)

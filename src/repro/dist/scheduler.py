@@ -1,0 +1,222 @@
+"""Shard-aware continuous batching + elastic shrink.
+
+One global FIFO feeds a slot pool that is physically partitioned across
+the mesh: slot ``k`` lives on shard ``k // slots_per_shard``, the pool's
+state array is sharded over the data axis, and every chunk is still ONE
+(sharded) engine call — each shard rolls its own sub-pool concurrently
+with zero collectives.  Admission is *least-loaded*: a request seats in
+the shard with the most free slots, keeping the sub-pools balanced so no
+shard idles while another queues.
+
+Elastic shrink (:meth:`DistributedReservoirServer.shrink`) is the serving
+side of :mod:`repro.runtime.elastic`: on a simulated shard loss the mesh
+is re-planned to the survivors, the engine is rebuilt from the cached
+:class:`~repro.plan.ExecutionPlan` (no re-lowering), and every in-flight
+sequence is re-admitted through the global FIFO with its snapshotted
+reservoir state as ``x0`` — the chunk API makes the resumed trajectory
+bit-identical, so no request is lost and no step is recomputed.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from repro.dist.engine import ShardedReservoirEngine
+from repro.launch.mesh import make_data_mesh
+from repro.runtime.elastic import shrink_serve_plan
+from repro.serve.batching import RolloutRequest
+from repro.serve.scheduler import AsyncReservoirServer, ContinuousBatcher
+from repro.serve.stats import ServeStats
+
+
+class ShardedContinuousBatcher(ContinuousBatcher):
+    """Slot pool partitioned into per-shard sub-pools.
+
+    ``n_slots = n_shards * slots_per_shard``; the chunk mechanics (state
+    carry, retirement, mid-flight admission) are inherited — the engine
+    call is sharded under the hood, so each shard's sub-pool rolls on its
+    own device.  Per-shard telemetry accumulates in ``shard_stats`` and
+    aggregates through :meth:`ServeStats.merge`.
+    """
+
+    def __init__(self, engine: ShardedReservoirEngine, *,
+                 slots_per_shard: int = 8, chunk_steps: int = 16,
+                 return_states: bool | None = None):
+        assert slots_per_shard >= 1
+        self.n_shards = engine.n_shards
+        self.slots_per_shard = slots_per_shard
+        super().__init__(engine, n_slots=engine.n_shards * slots_per_shard,
+                         chunk_steps=chunk_steps,
+                         return_states=return_states)
+        self.shard_stats = [ServeStats() for _ in range(self.n_shards)]
+
+    def shard_of(self, slot: int) -> int:
+        return slot // self.slots_per_shard
+
+    def free_slots_by_shard(self) -> list:
+        free = [0] * self.n_shards
+        for i, q in enumerate(self._slots):
+            if q is None:
+                free[self.shard_of(i)] += 1
+        return free
+
+    def _free_slot(self) -> int:
+        """Least-loaded admission: the emptiest shard's first free slot
+        (lowest shard id on ties, so placement is deterministic)."""
+        free = self.free_slots_by_shard()
+        shard = max(range(self.n_shards), key=lambda s: (free[s], -s))
+        lo = shard * self.slots_per_shard
+        for i in range(lo, lo + self.slots_per_shard):
+            if self._slots[i] is None:
+                return i
+        raise RuntimeError("no free slot")       # guarded by has_free_slot
+
+    def admit(self, qreq) -> int:
+        slot = super().admit(qreq)
+        wait = (0.0 if qreq.admit_time is None
+                else qreq.admit_time - qreq.arrival_time)
+        self.shard_stats[self.shard_of(slot)].record_admission(wait)
+        return slot
+
+    def run_chunk(self):
+        retired, real = super().run_chunk()
+        live = [0] * self.n_shards
+        for slot, n in self.last_take.items():
+            live[self.shard_of(slot)] += n
+        for s in range(self.n_shards):
+            self.shard_stats[s].record_chunk(
+                live_steps=live[s],
+                total_steps=self.slots_per_shard * self.chunk_steps)
+        for slot in self.last_retired_slots:
+            self.shard_stats[self.shard_of(slot)].record_completion()
+        return retired, real
+
+    def snapshot_live(self) -> list:
+        """Freeze the in-flight work: ``(qreq, remaining_inputs, state,
+        produced_chunks)`` per live slot — everything shrink needs to
+        re-admit a sequence with nothing lost or recomputed."""
+        states = np.asarray(self._states)
+        out = []
+        for i, q in enumerate(self._slots):
+            if q is None:
+                continue
+            remaining = np.asarray(q.request.inputs)[self._pos[i]:]
+            out.append((q, remaining, states[i].copy(),
+                        list(self._chunks[i])))
+        return out
+
+
+class DistributedReservoirServer(AsyncReservoirServer):
+    """Global FIFO + sharded slot pool + elastic shrink.
+
+    The event loop is inherited from :class:`AsyncReservoirServer`
+    (virtual clock, FIFO admission sweep, deadline drops); this class adds
+    the sharded batcher, per-shard telemetry aggregation
+    (:meth:`shard_summary`) and the failure path (:meth:`shrink`).
+    """
+
+    def __init__(self, engine: ShardedReservoirEngine, *,
+                 slots_per_shard: int = 8, chunk_steps: int = 16,
+                 return_states: bool | None = None,
+                 stats: ServeStats | None = None,
+                 chunk_time: float | None = None):
+        self.engine = engine
+        self.slots_per_shard = slots_per_shard
+        self.chunk_steps = chunk_steps
+        self.return_states = return_states
+        batcher = ShardedContinuousBatcher(
+            engine, slots_per_shard=slots_per_shard,
+            chunk_steps=chunk_steps, return_states=return_states)
+        super().__init__(engine, stats=stats, chunk_time=chunk_time,
+                         batcher=batcher)
+        self.reshards = 0                 # completed shrink operations
+        self.readmitted = 0               # in-flight seqs carried across
+        self._prefixes: dict = {}         # uid -> chunks produced pre-shrink
+        self._shard_epochs: list = []     # pre-shrink batchers' shard stats
+
+    @property
+    def n_shards(self) -> int:
+        return self.engine.n_shards
+
+    def shard_summary(self) -> ServeStats:
+        """All per-shard telemetry merged into one ``ServeStats`` (the
+        parts stay addressable on ``.shards``).  Covers the whole run:
+        after a shrink the retired topology's stats stay in the merge,
+        labelled ``epochN/shardK`` so totals (completions, admissions)
+        never understate what the server actually served."""
+        epochs = self._shard_epochs + [self.batcher.shard_stats]
+        parts, labels = [], []
+        for e, shard_list in enumerate(epochs):
+            for i, s in enumerate(shard_list):
+                parts.append(s)
+                labels.append(f"shard{i}" if len(epochs) == 1
+                              else f"epoch{e}/shard{i}")
+        return ServeStats.merge(parts, labels)
+
+    def step(self) -> bool:
+        alive = super().step()
+        # a sequence resumed across a shrink retires with only its
+        # post-shrink output; prepend the snapshotted prefix chunks
+        if self._prefixes:
+            for uid in [u for u in self._prefixes if u in self.results]:
+                prefix = self._prefixes.pop(uid)
+                self.results[uid] = np.concatenate(
+                    prefix + [self.results[uid]], axis=0)
+        return alive
+
+    # -- elastic -------------------------------------------------------------
+    def shrink(self, failed: int = 1) -> dict:
+        """Simulated shard loss: rebuild on the survivors, lose nothing.
+
+        Executes :func:`repro.runtime.elastic.shrink_serve_plan`'s action
+        list: snapshot every live slot (state + remaining inputs + output
+        so far), rebuild the engine on a mesh of the surviving devices
+        (the :class:`ExecutionPlan` is cached per matrix, so this is jit
+        setup only), stand up a fresh sharded batcher, and push the
+        snapshots back through the global FIFO — they sort by their
+        original arrival times, so they re-seat first.  Returns the plan
+        dict (with ``n_shards`` before/after) for the caller's logs.
+        """
+        plan = shrink_serve_plan(self.n_shards, failed)
+        new_n = max(plan["usable_devices"], 1)
+        carried = self.batcher.snapshot_live()
+
+        engine = ShardedReservoirEngine(
+            self.engine.params,
+            mesh=make_data_mesh(devices=self.engine.mesh.devices.ravel()
+                                [:new_n].tolist()),
+            backend=self.engine.backend, interpret=self.engine.interpret,
+            stats=self.engine.stats, vmem_budget=self.engine.vmem_budget,
+            dense_dispatch_density=self.engine.dense_dispatch_density)
+        self.engine = engine
+        self._shard_epochs.append(self.batcher.shard_stats)
+        self.batcher = ShardedContinuousBatcher(
+            engine, slots_per_shard=self.slots_per_shard,
+            chunk_steps=self.chunk_steps, return_states=self.return_states)
+
+        for qreq, remaining, state, chunks in carried:
+            if chunks:
+                self._prefixes[qreq.uid] = \
+                    self._prefixes.pop(qreq.uid, []) + chunks
+            qreq.request = RolloutRequest(uid=qreq.uid, inputs=remaining,
+                                          x0=state)
+            # original (arrival_time, seq) key: carried work re-seats
+            # ahead of everything that queued behind it
+            heapq.heappush(self._queue,
+                           (qreq.arrival_time, qreq.seq, qreq))
+            qreq.admit_time = None
+            # wait accounting restarts at the shrink; the heap key above
+            # keeps the original priority
+            qreq.arrival_time = self.now
+            # it was already admitted once — carried work is never dropped
+            # and never double-counted in the server's admission stats
+            qreq.deadline = None
+            qreq.requeued = True
+        self.reshards += 1
+        self.readmitted += len(carried)
+        plan["n_shards_before"] = plan["survivors"] + failed
+        plan["n_shards_after"] = new_n
+        plan["readmitted"] = len(carried)
+        return plan

@@ -21,3 +21,25 @@ def make_host_mesh():
     """Trivial mesh over whatever devices exist (CPU smoke/examples)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_data_mesh(n_shards: int | None = None, devices=None):
+    """1-D ``('data',)`` mesh for batch-axis sharded serving.
+
+    The reservoir is frozen and replicated (the paper's premise), so the
+    serving mesh carries no model axis — just ``n_shards`` data shards over
+    the first ``n_shards`` devices (all of them by default).  ``devices``
+    pins an explicit device list, which is how the elastic path builds the
+    shrunk mesh from the survivors.
+    """
+    from jax.sharding import Mesh
+    import numpy as np
+    if n_shards is not None and n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if devices is None:
+        devices = jax.devices()
+    if n_shards is not None:
+        if len(devices) < n_shards:
+            raise ValueError(f"need {n_shards} devices, have {len(devices)}")
+        devices = devices[:n_shards]
+    return Mesh(np.asarray(devices), ("data",))

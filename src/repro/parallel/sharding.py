@@ -28,6 +28,11 @@ def data_axis_names(mesh: Mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def data_axis_size(mesh: Mesh) -> int:
+    """Data-parallel width: product of the batch axes ('pod' x 'data')."""
+    return _axis_size(mesh, data_axis_names(mesh))
+
+
 def _axis_size(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1

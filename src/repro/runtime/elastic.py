@@ -15,8 +15,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
-__all__ = ["plan_mesh", "replan_after_failure", "StragglerWatchdog",
-           "Heartbeats"]
+__all__ = ["plan_mesh", "replan_after_failure", "shrink_serve_plan",
+           "StragglerWatchdog", "Heartbeats"]
 
 
 def plan_mesh(n_devices: int, model_parallel: int,
@@ -64,6 +64,29 @@ def replan_after_failure(prev_devices: int, failed: int, model_parallel: int,
             "resume from restored step counter (data stream is stateless)",
         ],
     }
+
+
+def shrink_serve_plan(n_shards: int, failed: int) -> dict:
+    """Failure response for a data-parallel *serving* pool.
+
+    Serving shards carry no model parallelism (the reservoir is replicated),
+    so every survivor count is usable — ``replan_after_failure`` with
+    ``model_parallel=1`` gives the new width — but the state that must
+    survive is different from training: there is no checkpoint to restore,
+    the in-flight reservoir states ARE the recovery payload.  The action
+    list reflects that; ``DistributedReservoirServer.shrink`` executes it.
+    """
+    base = replan_after_failure(n_shards, failed, model_parallel=1)
+    base["actions"] = [
+        "freeze admission; no new chunk is launched",
+        "snapshot per-slot reservoir state x(t) and consumed step counts",
+        "rebuild the sharded engine on the surviving mesh (ExecutionPlan "
+        "is cached per matrix — no re-lowering)",
+        "re-admit in-flight sequences with x0 = snapshot via the global "
+        "FIFO (least-loaded shard admission)",
+        "resume: queued requests were never lost, they stay in the FIFO",
+    ]
+    return base
 
 
 @dataclasses.dataclass

@@ -134,6 +134,35 @@ class ReservoirEngine:
 
         return jax.jit(rollout)
 
+    # -- backend dispatch ----------------------------------------------------
+    def _local_rollout(self, with_readout: bool, with_final: bool):
+        """The pure ``(B, T, I), (B, R) -> (B, T, *)`` rollout callable.
+
+        Batch rows are independent through it (the recurrence never mixes
+        rows), which is the property the sharded engine relies on: the same
+        callable is the ``shard_map`` body in :mod:`repro.dist`, one
+        replica per data shard over the batch axis.
+        """
+        if self.backend == "pallas":
+            fused = self._fused
+
+            def fn(u_bt, x0):
+                out = fused(jnp.swapaxes(u_bt, 0, 1), x0,
+                            return_states=not with_readout,
+                            return_preds=with_readout,
+                            return_final=with_final)
+                y, xf = out if with_final else (out, None)
+                y = jnp.swapaxes(y, 0, 1)
+                return (y, xf) if with_final else y
+
+            return fn
+        return self._xla(with_readout, with_final)
+
+    def _dispatch(self, u, x0b, with_readout: bool, with_final: bool):
+        """One fused rollout call -> ``(out, final_state_or_None)``."""
+        out = self._local_rollout(with_readout, with_final)(u, x0b)
+        return out if with_final else (out, None)
+
     # -- public API ----------------------------------------------------------
     @property
     def has_readout(self) -> bool:
@@ -179,14 +208,7 @@ class ReservoirEngine:
         u, x0b, single = self._prepare(inputs, x0)
         b, t, _ = u.shape
         t0 = time.perf_counter()
-        if self.backend == "pallas":
-            out = self._fused(jnp.swapaxes(u, 0, 1), x0b,
-                              return_final=return_final_state)
-            states, xf = out if return_final_state else (out, None)
-            states = jnp.swapaxes(states, 0, 1)
-        else:
-            out = self._xla(False, return_final_state)(u, x0b)
-            states, xf = out if return_final_state else (out, None)
+        states, xf = self._dispatch(u, x0b, False, return_final_state)
         self._record(states, b, t, t0, real_steps)
         if return_final_state:
             return (states[0], xf[0]) if single else (states, xf)
@@ -210,15 +232,7 @@ class ReservoirEngine:
         u, x0b, single = self._prepare(inputs, x0)
         b, t, _ = u.shape
         t0 = time.perf_counter()
-        if self.backend == "pallas":
-            out = self._fused(jnp.swapaxes(u, 0, 1), x0b,
-                              return_states=False, return_preds=True,
-                              return_final=return_final_state)
-            preds, xf = out if return_final_state else (out, None)
-            preds = jnp.swapaxes(preds, 0, 1)
-        else:
-            out = self._xla(True, return_final_state)(u, x0b)
-            preds, xf = out if return_final_state else (out, None)
+        preds, xf = self._dispatch(u, x0b, True, return_final_state)
         self._record(preds, b, t, t0, real_steps)
         if return_final_state:
             return (preds[0], xf[0]) if single else (preds, xf)

@@ -44,6 +44,11 @@ class QueuedRequest:
     the system (all on the server's clock): ``admit_time`` when it takes a
     slot, ``first_output_time`` when its first chunk of predictions is
     ready, ``finish_time`` when it retires.
+
+    ``deadline`` (absolute, on the same clock) bounds the queue wait: a
+    request still queued past it is dropped at the next admission sweep —
+    counted in ``ServeStats.timed_out`` — instead of occupying a slot for
+    an answer nobody is waiting for anymore.
     """
 
     request: RolloutRequest
@@ -52,6 +57,10 @@ class QueuedRequest:
     admit_time: float | None = None
     first_output_time: float | None = None
     finish_time: float | None = None
+    deadline: float | None = None
+    requeued: bool = False               # back in the queue after a shrink:
+    #                                      the next seat is a re-admission
+    #                                      and must not double-count stats
 
     @property
     def uid(self) -> Any:
@@ -89,6 +98,8 @@ class ContinuousBatcher:
         self._pos = [0] * n_slots               # steps consumed per slot
         self._chunks: list[list] = [[] for _ in range(n_slots)]
         self._states = jnp.zeros((n_slots, self._dim), jnp.float32)
+        self.last_take: dict = {}               # slot -> steps, last chunk
+        self.last_retired_slots: list = []
 
     @property
     def live(self) -> int:
@@ -97,9 +108,15 @@ class ContinuousBatcher:
     def has_free_slot(self) -> bool:
         return any(s is None for s in self._slots)
 
+    def _free_slot(self) -> int:
+        """Pick the free slot to seat the next request in.  Subclass hook:
+        the sharded batcher overrides this with least-loaded-shard
+        admission."""
+        return self._slots.index(None)
+
     def admit(self, qreq: QueuedRequest) -> int:
         """Seat a request in a free slot (zero state, or its ``x0``)."""
-        slot = self._slots.index(None)
+        slot = self._free_slot()
         self._slots[slot] = qreq
         self._pos[slot] = 0
         self._chunks[slot] = []
@@ -138,6 +155,7 @@ class ContinuousBatcher:
         out = np.asarray(out)
         self._states = xf
         retired = []
+        retired_slots = []
         for i, n in take.items():
             q = self._slots[i]
             # copy: a bare out[i, :n] view would pin the whole
@@ -146,8 +164,12 @@ class ContinuousBatcher:
             self._pos[i] += n
             if self._pos[i] >= q.length:
                 retired.append((q, np.concatenate(self._chunks[i], axis=0)))
+                retired_slots.append(i)
                 self._slots[i] = None
                 self._chunks[i] = []
+        # per-slot view of the chunk just run, for per-shard telemetry
+        self.last_take = dict(take)
+        self.last_retired_slots = retired_slots
         return retired, sum(take.values())
 
 
@@ -170,10 +192,11 @@ class AsyncReservoirServer:
     def __init__(self, engine, *, n_slots: int = 8, chunk_steps: int = 16,
                  return_states: bool | None = None,
                  stats: ServeStats | None = None,
-                 chunk_time: float | None = None):
-        self.batcher = ContinuousBatcher(engine, n_slots=n_slots,
-                                         chunk_steps=chunk_steps,
-                                         return_states=return_states)
+                 chunk_time: float | None = None,
+                 batcher: ContinuousBatcher | None = None):
+        self.batcher = batcher if batcher is not None else ContinuousBatcher(
+            engine, n_slots=n_slots, chunk_steps=chunk_steps,
+            return_states=return_states)
         self.stats = stats if stats is not None else engine.stats
         self.chunk_time = chunk_time
         self.now = 0.0
@@ -183,10 +206,19 @@ class AsyncReservoirServer:
 
     # -- queue ---------------------------------------------------------------
     def submit(self, request: RolloutRequest,
-               arrival_time: float | None = None) -> QueuedRequest:
-        """Enqueue one request; ``arrival_time`` defaults to ``now``."""
+               arrival_time: float | None = None,
+               deadline: float | None = None) -> QueuedRequest:
+        """Enqueue one request; ``arrival_time`` defaults to ``now``.
+
+        ``deadline`` is an absolute time on the server's clock: a request
+        still waiting in the queue past it is dropped (``timed_out`` in
+        stats) rather than seated.  A request already in a slot always
+        runs to completion.
+        """
         at = self.now if arrival_time is None else float(arrival_time)
-        qreq = QueuedRequest(request, arrival_time=at, seq=self._seq)
+        qreq = QueuedRequest(request, arrival_time=at, seq=self._seq,
+                             deadline=None if deadline is None
+                             else float(deadline))
         self._seq += 1
         heapq.heappush(self._queue, (at, qreq.seq, qreq))
         self.stats.record_enqueue()
@@ -201,11 +233,22 @@ class AsyncReservoirServer:
         return not self._queue and self.batcher.live == 0
 
     def _admit_arrived(self) -> None:
-        while (self._queue and self.batcher.has_free_slot()
-               and self._queue[0][0] <= self.now):
-            _, _, qreq = heapq.heappop(self._queue)
+        while self._queue and self._queue[0][0] <= self.now:
+            qreq = self._queue[0][2]
+            if qreq.deadline is not None and self.now > qreq.deadline:
+                # expired while queued: drop it instead of rolling steps
+                # nobody is waiting for anymore
+                heapq.heappop(self._queue)
+                self.stats.record_timeout()
+                continue
+            if not self.batcher.has_free_slot():
+                break
+            heapq.heappop(self._queue)
             qreq.admit_time = self.now
-            self.stats.record_admission(self.now - qreq.arrival_time)
+            if qreq.requeued:
+                qreq.requeued = False
+            else:
+                self.stats.record_admission(self.now - qreq.arrival_time)
             self.batcher.admit(qreq)
 
     # -- event loop ----------------------------------------------------------
@@ -217,6 +260,10 @@ class AsyncReservoirServer:
             # pool idle: fast-forward the clock to the next arrival
             self.now = max(self.now, self._queue[0][0])
         self._admit_arrived()
+        if self.batcher.live == 0:
+            # everything at the head expired (or only future arrivals are
+            # left): no chunk to run this step
+            return not self.drained
         t0 = time.perf_counter()
         retired, real_steps = self.batcher.run_chunk()
         self.now += (time.perf_counter() - t0 if self.chunk_time is None

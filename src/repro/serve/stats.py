@@ -10,6 +10,7 @@ is doing useful work.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 
 @dataclasses.dataclass
@@ -26,6 +27,7 @@ class ServeStats:
     enqueued: int = 0              # requests submitted to the queue
     admitted: int = 0              # requests seated in a slot
     completed: int = 0             # requests fully served
+    timed_out: int = 0             # queued requests dropped past deadline
     chunks: int = 0                # scheduler chunks executed
     queue_wait_s: float = 0.0      # summed arrival -> admission wait
     queue_wait_max_s: float = 0.0
@@ -33,7 +35,44 @@ class ServeStats:
     ttfp_max_s: float = 0.0
     slot_steps_live: int = 0       # chunk steps that consumed real input
     slot_steps_total: int = 0      # chunk steps across the whole pool
+    # per-shard breakdown attached by merge(); None on a plain instance
+    shards: dict | None = dataclasses.field(default=None, repr=False)
     _EWMA_ALPHA = 0.2
+
+    # additive counters merge() sums across shards; the *_max_s fields are
+    # maxed and latency_ewma_s is calls-weighted instead.
+    _SUM_FIELDS = ("calls", "sequences", "steps_real", "steps_padded",
+                   "seconds", "enqueued", "admitted", "completed",
+                   "timed_out", "chunks", "queue_wait_s", "ttfp_s",
+                   "slot_steps_live", "slot_steps_total")
+
+    @staticmethod
+    def merge(parts: "Sequence[ServeStats]",
+              labels: Sequence[str] | None = None) -> "ServeStats":
+        """Aggregate per-shard stats into one view.
+
+        Additive counters are summed (``seconds`` becomes aggregate
+        device-seconds — shards run concurrently, so throughput across a
+        wall-clock window should be computed from the window, not from the
+        merged ``seconds``), the ``*_max_s`` fields take the worst shard,
+        and the latency EWMA is the calls-weighted mean.  The parts land on
+        ``merged.shards`` keyed by ``labels`` (default ``shard0..N``) and
+        show up as a per-shard breakdown in ``summary()``/``render()``.
+        """
+        parts = list(parts)
+        if labels is None:
+            labels = [f"shard{i}" for i in range(len(parts))]
+        merged = ServeStats()
+        for f in ServeStats._SUM_FIELDS:
+            setattr(merged, f, sum(getattr(p, f) for p in parts))
+        merged.queue_wait_max_s = max(
+            (p.queue_wait_max_s for p in parts), default=0.0)
+        merged.ttfp_max_s = max((p.ttfp_max_s for p in parts), default=0.0)
+        if merged.calls:
+            merged.latency_ewma_s = sum(
+                p.latency_ewma_s * p.calls for p in parts) / merged.calls
+        merged.shards = dict(zip(labels, parts))
+        return merged
 
     def record_call(self, *, batch: int, steps: int, seconds: float,
                     real_steps: int | None = None) -> None:
@@ -67,6 +106,11 @@ class ServeStats:
 
     def record_completion(self) -> None:
         self.completed += 1
+
+    def record_timeout(self) -> None:
+        """One queued request dropped because its deadline passed before a
+        slot freed up (it never occupied one)."""
+        self.timed_out += 1
 
     def record_chunk(self, *, live_steps: int, total_steps: int) -> None:
         """One scheduler chunk: ``live_steps`` of the pool's
@@ -127,6 +171,7 @@ class ServeStats:
                 "enqueued": self.enqueued,
                 "admitted": self.admitted,
                 "completed": self.completed,
+                "timed_out": self.timed_out,
                 "chunks": self.chunks,
                 "mean_queue_wait_ms": self.mean_queue_wait_s * 1e3,
                 "max_queue_wait_ms": self.queue_wait_max_s * 1e3,
@@ -134,6 +179,9 @@ class ServeStats:
                 "max_ttfp_ms": self.ttfp_max_s * 1e3,
                 "slot_occupancy": self.slot_occupancy,
             })
+        if self.shards is not None:
+            out["shards"] = {label: part.summary()
+                             for label, part in self.shards.items()}
         return out
 
     def render(self) -> str:
@@ -151,4 +199,12 @@ class ServeStats:
                      f"{s['max_queue_wait_ms']:.2f} ms max, "
                      f"ttfp {s['mean_ttfp_ms']:.2f} ms mean, "
                      f"occupancy {s['slot_occupancy']:.0%}")
+            if self.timed_out:
+                line += f", {self.timed_out} timed out"
+        if self.shards is not None:
+            for label, p in self.shards.items():
+                line += (f"\n  {label}: {p.admitted} admitted, "
+                         f"{p.completed} done, "
+                         f"{p.slot_steps_live} live steps, "
+                         f"occupancy {p.slot_occupancy:.0%}")
         return line

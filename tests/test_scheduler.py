@@ -267,6 +267,65 @@ class TestQueueStats:
         assert res[0].shape == (4, 2)
 
 
+class TestDeadlines:
+    def test_expired_queued_request_dropped(self):
+        """Pool of one: the second request's deadline passes while it
+        queues, so it is dropped — counted, never seated — and the slot
+        goes to the third request instead."""
+        p = _params()
+        eng, srv = _server(p, n_slots=1, chunk_steps=8)
+        held = srv.submit(_requests([16], seed=20)[0], arrival_time=0.0)
+        doomed = srv.submit(
+            RolloutRequest(uid="doomed", inputs=np.ones((8, 1), np.float32)),
+            arrival_time=0.0, deadline=0.5)
+        patient = srv.submit(
+            RolloutRequest(uid="patient", inputs=np.ones((8, 1), np.float32)),
+            arrival_time=0.0)
+        res = srv.run()
+        assert "doomed" not in res
+        assert doomed.admit_time is None and doomed.finish_time is None
+        assert set(res) == {held.uid, "patient"}
+        s = eng.stats
+        assert s.timed_out == 1
+        assert s.enqueued == 3 and s.admitted == 2 and s.completed == 2
+        assert "1 timed out" in s.render()
+
+    def test_deadline_met_is_served(self):
+        p = _params()
+        _, srv = _server(p, n_slots=1, chunk_steps=8)
+        q = srv.submit(_requests([8], seed=21)[0], arrival_time=0.0,
+                       deadline=5.0)
+        res = srv.run()
+        assert q.finish_time is not None and 0 in res
+
+    def test_admitted_request_runs_past_deadline(self):
+        """A deadline bounds the queue wait, not the service time: once
+        seated, the rollout completes even if it outlives the deadline."""
+        p = _params()
+        _, srv = _server(p, n_slots=1, chunk_steps=8)
+        q = srv.submit(_requests([32], seed=22)[0], arrival_time=0.0,
+                       deadline=1.5)            # 4 chunks > deadline
+        res = srv.run()
+        assert q.finish_time == pytest.approx(4.0)
+        assert res[0].shape == (32, 2)
+
+    def test_all_expired_queue_drains(self):
+        """A queue holding only expired requests drains without running
+        chunks for them (and run() terminates)."""
+        p = _params()
+        eng, srv = _server(p, n_slots=1, chunk_steps=8)
+        srv.submit(_requests([24], seed=23)[0], arrival_time=0.0)
+        for i in range(3):
+            srv.submit(RolloutRequest(
+                uid=f"late{i}", inputs=np.ones((8, 1), np.float32)),
+                arrival_time=0.0, deadline=1.0)
+        res = srv.run()
+        assert set(res) == {0}
+        assert eng.stats.timed_out == 3
+        # only the first request's chunks ran
+        assert eng.stats.chunks == 3
+
+
 class TestContinuousBatcherUnit:
     def test_slot_reuse_and_retire(self):
         p = _params()
