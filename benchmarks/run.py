@@ -35,8 +35,10 @@ ROWS: list = []
 FAST = False                      # --fast: smaller sweeps for CI smoke runs
 JSON_OUT = "BENCH_serve.json"     # --json-out: serve-family results
 STATS_OUT = "BENCH_plan_stats.json"  # plan-compiler stats (CI culling gate)
+SPECIALIZE_OUT = "BENCH_specialize.json"  # regime-selection stats artifact
 SERVE_RESULTS: list = []          # rows across serve_* families
 PLAN_STATS: dict = {}             # ExecutionPlan stats keyed by matrix name
+SPECIALIZE_STATS: dict = {}       # regime selection per benchmarked matrix
 
 
 def emit(name: str, value: float, derived=""):
@@ -639,6 +641,85 @@ def serve_sharded():
     SERVE_RESULTS.extend(rows)
 
 
+def serve_specialized():
+    """Plan-specialized rollout vs the PR-2 fused baseline.
+
+    The workload is the paper's own: an int8-CSD reservoir whose digit
+    planes the specialization pass constant-propagates — all matmul-path
+    planes of a block fold into ONE int8 tile (the quantized block), so
+    one int32 gemm replaces the ``width`` shifted pos/neg plane products
+    of the generic engine, bit-identically (int32 accumulation is exact).
+    The baseline is the same engine with ``specialize=False`` — exactly
+    the fused rollout PR 2 shipped.  Regime-selection stats (resident vs
+    double-buffered, on-chip bytes, matmul vs shift-add term counts) land
+    in BENCH_specialize.json for the CI artifact.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.plan import plan_for, specialize_summary
+    from repro.serve import ReservoirEngine
+
+    dims = (256, 512) if FAST else (512, 1024, 2048)
+    batch = 8
+    t_steps = 4 if FAST else 8
+    reps = 2
+    mode = "int8-csd"
+    for dim in dims:
+        params = _serve_params(dim, mode)
+        baseline = ReservoirEngine(params, specialize=False)
+        spec = ReservoirEngine(params)
+        rng = np.random.default_rng(6)
+        u = jnp.asarray(rng.standard_normal((batch, t_steps, 4)), jnp.float32)
+        # honesty check: the specialized program must be bit-identical
+        ref = np.asarray(baseline.rollout(u[:2, :2]))
+        got = np.asarray(spec.rollout(u[:2, :2]))
+        assert (ref == got).all(), f"specialized != baseline at dim {dim}"
+        t_base = _time_rollout(
+            lambda: jax.block_until_ready(baseline.rollout(u)), reps)
+        t_spec = _time_rollout(
+            lambda: jax.block_until_ready(spec.rollout(u)), reps)
+        steps = batch * t_steps
+        speedup = t_base / t_spec
+        plan = plan_for(params.w)
+        regime = specialize_summary(plan, "int8")
+        regime["fp32"] = specialize_summary(plan, "fp32")
+        regime["xla_schedule"] = spec.xla_schedule
+        SPECIALIZE_STATS[f"serve_{dim}_{mode}"] = regime
+        emit(f"serve_specialized/{mode}/dim={dim}/batch={batch}/baseline",
+             t_base * 1e6 / steps, f"steps_per_sec={steps / t_base:.0f}")
+        emit(f"serve_specialized/{mode}/dim={dim}/batch={batch}/specialized",
+             t_spec * 1e6 / steps,
+             f"steps_per_sec={steps / t_spec:.0f};speedup={speedup:.2f};"
+             f"regime={regime['regime']}")
+        SERVE_RESULTS.append({
+            "family": "serve_specialized",
+            "mode": mode, "dim": dim, "batch": batch,
+            "steps": t_steps, "backend": "xla",
+            "baseline_steps_per_sec": steps / t_base,
+            "specialized_steps_per_sec": steps / t_spec,
+            "speedup": speedup,
+            "xla_schedule": spec.xla_schedule,
+            "regime": regime["regime"],
+            "resident_bytes": regime["resident_bytes"],
+            "n_matmul_terms": regime["n_matmul_terms"],
+            "n_shiftadd_terms": regime["n_shiftadd_terms"],
+        })
+    # Pallas datapoint: specialized kernel (resident/pipelined regime,
+    # batch-tiled) vs the generic banded kernel, interpret mode on CPU —
+    # shows the regimes execute end-to-end, not TPU performance.
+    params = _serve_params(256, "fp32", seed=2)
+    gen = ReservoirEngine(params, backend="pallas", specialize=False)
+    sp = ReservoirEngine(params, backend="pallas")
+    u = jnp.asarray(np.random.default_rng(2).standard_normal((8, 8, 4)),
+                    jnp.float32)
+    assert (np.asarray(gen.rollout(u)) == np.asarray(sp.rollout(u))).all()
+    t_gen = _time_rollout(lambda: jax.block_until_ready(gen.rollout(u)), 2)
+    t_sp = _time_rollout(lambda: jax.block_until_ready(sp.rollout(u)), 2)
+    emit("serve_specialized/fp32/dim=256/batch=8/pallas_interpret",
+         t_sp * 1e6 / 64,
+         f"generic_us={t_gen * 1e6 / 64:.1f};regime={sp.program.regime}")
+
+
 def serve_plan_stats():
     """ExecutionPlan compile stats: what the shared lowering kept/culled.
 
@@ -694,10 +775,15 @@ def _flush_serve_json():
                            "serve() on a Poisson arrival trace",
             "serve_sharded": "8-shard vs single-shard distributed serving "
                              "on a Poisson trace (device-parallel clock)",
+            "serve_specialized": "plan-specialized rollout (constant-"
+                                 "propagated CSD folding, resident/"
+                                 "pipelined regimes) vs the PR-2 fused "
+                                 "baseline",
         },
         "fast_mode": FAST,
         "rows": SERVE_RESULTS,
         "plan_stats": PLAN_STATS,
+        "specialize_stats": SPECIALIZE_STATS,
     }
     with open(JSON_OUT, "w") as fh:
         json.dump(payload, fh, indent=2)
@@ -707,6 +793,11 @@ def _flush_serve_json():
             json.dump(PLAN_STATS, fh, indent=2)
         print(f"# wrote {STATS_OUT} ({len(PLAN_STATS)} plans)",
               file=sys.stderr)
+    if SPECIALIZE_STATS:
+        with open(SPECIALIZE_OUT, "w") as fh:
+            json.dump(SPECIALIZE_STATS, fh, indent=2)
+        print(f"# wrote {SPECIALIZE_OUT} ({len(SPECIALIZE_STATS)} matrices)",
+              file=sys.stderr)
 
 
 ALL = [fig05_bit_sparsity, fig06_element_vs_bit_sparse, fig07_matrix_size,
@@ -714,7 +805,8 @@ ALL = [fig05_bit_sparsity, fig06_element_vs_bit_sparse, fig07_matrix_size,
        fig12_large_power, fig13_14_dim_sweep, fig15_16_sparsity_sweep,
        fig17_18_batching, fig19_20_sigma_dim, fig21_22_sigma_sparsity,
        fig23_sigma_batching, esn_quality, kernel_walltimes, serve_rollout,
-       serve_readout, serve_queue, serve_sharded, serve_plan_stats]
+       serve_readout, serve_queue, serve_sharded, serve_specialized,
+       serve_plan_stats]
 
 
 def main(argv=None) -> None:

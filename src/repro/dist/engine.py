@@ -26,7 +26,8 @@ from repro.launch.mesh import make_data_mesh
 from repro.parallel.sharding import (batch_spec, data_axis_names,
                                      data_axis_size)
 from repro.plan import DEFAULT_VMEM_BUDGET
-from repro.serve.engine import DENSE_DISPATCH_DENSITY, ReservoirEngine
+from repro.serve.engine import (DENSE_DISPATCH_DENSITY, ReservoirEngine,
+                                donated_call)
 from repro.serve.stats import ServeStats
 
 
@@ -48,7 +49,8 @@ class ShardedReservoirEngine(ReservoirEngine):
                  backend: str = "auto", interpret: bool = True,
                  stats: ServeStats | None = None,
                  dense_dispatch_density: float = DENSE_DISPATCH_DENSITY,
-                 vmem_budget: int | None = DEFAULT_VMEM_BUDGET):
+                 vmem_budget: int | None = DEFAULT_VMEM_BUDGET,
+                 specialize: bool = True):
         self.mesh = mesh if mesh is not None else make_data_mesh(n_shards)
         assert data_axis_names(self.mesh), \
             f"mesh has no data axes: {self.mesh.axis_names}"
@@ -61,12 +63,20 @@ class ShardedReservoirEngine(ReservoirEngine):
         super().__init__(params, backend=backend, interpret=interpret,
                          stats=stats,
                          dense_dispatch_density=dense_dispatch_density,
-                         vmem_budget=vmem_budget)
+                         vmem_budget=vmem_budget, specialize=specialize)
         self._sharded_fns: dict = {}
 
-    def _sharded(self, with_readout: bool, with_final: bool):
-        """jit(shard_map(local_rollout)) cached per output signature."""
-        key = (with_readout, with_final)
+    def _sharded(self, with_readout: bool, with_final: bool,
+                 donate: bool = False):
+        """jit(shard_map(local_rollout)) cached per output signature.
+
+        The shard_map body is the *specialized* local rollout callable —
+        the sharded path inherits whatever program the plan selected
+        (folded int8 gemm, resident/pipelined pallas kernel) for free.
+        ``donate`` donates the carried state at the jit boundary, so the
+        zero-copy chunk API works sharded too.
+        """
+        key = (with_readout, with_final, donate)
         fn = self._sharded_fns.get(key)
         if fn is None:
             spec = self._batch_spec
@@ -77,27 +87,30 @@ class ShardedReservoirEngine(ReservoirEngine):
             fn = jax.jit(shard_map(
                 self._local_rollout(with_readout, with_final),
                 mesh=self.mesh, in_specs=(spec, spec), out_specs=out_specs,
-                check_rep=False))
+                check_rep=False),
+                donate_argnums=(1,) if donate else ())
             self._sharded_fns[key] = fn
         return fn
 
-    def _dispatch(self, u, x0b, with_readout: bool, with_final: bool):
+    def _dispatch(self, u, x0b, with_readout: bool, with_final: bool,
+                  donate: bool = False):
         b = u.shape[0]
         bpad = -(-b // self.n_shards) * self.n_shards
         if bpad != b:
             u = jnp.pad(u, ((0, bpad - b), (0, 0), (0, 0)))
             x0b = jnp.pad(x0b, ((0, bpad - b), (0, 0)))
-        out = self._sharded(with_readout, with_final)(u, x0b)
+        fn = self._sharded(with_readout, with_final, donate)
+        out = donated_call(fn, u, x0b) if donate else fn(u, x0b)
         out, xf = out if with_final else (out, None)
         if bpad != b:
             out = out[:b]
             xf = None if xf is None else xf[:b]
         return out, xf
 
-    def _record(self, out, batch, steps, t0, real_steps):
+    def _record(self, out, batch, steps, t0, real_steps, defer=False):
         # account the shard-padding rows as executed-but-padded work, so
         # padding_efficiency stays honest about the sharding overhead
         bpad = -(-batch // self.n_shards) * self.n_shards
         if real_steps is None:
             real_steps = batch * steps
-        return super()._record(out, bpad, steps, t0, real_steps)
+        return super()._record(out, bpad, steps, t0, real_steps, defer=defer)

@@ -43,13 +43,14 @@ class ShardedContinuousBatcher(ContinuousBatcher):
 
     def __init__(self, engine: ShardedReservoirEngine, *,
                  slots_per_shard: int = 8, chunk_steps: int = 16,
-                 return_states: bool | None = None):
+                 return_states: bool | None = None,
+                 zero_copy: bool | None = None):
         assert slots_per_shard >= 1
         self.n_shards = engine.n_shards
         self.slots_per_shard = slots_per_shard
         super().__init__(engine, n_slots=engine.n_shards * slots_per_shard,
                          chunk_steps=chunk_steps,
-                         return_states=return_states)
+                         return_states=return_states, zero_copy=zero_copy)
         self.shard_stats = [ServeStats() for _ in range(self.n_shards)]
 
     def shard_of(self, slot: int) -> int:
@@ -102,9 +103,8 @@ class ShardedContinuousBatcher(ContinuousBatcher):
         for i, q in enumerate(self._slots):
             if q is None:
                 continue
-            remaining = np.asarray(q.request.inputs)[self._pos[i]:]
-            out.append((q, remaining, states[i].copy(),
-                        list(self._chunks[i])))
+            out.append((q, self.remaining_inputs(i), states[i].copy(),
+                        self.chunk_outputs(i)))
         return out
 
 
@@ -121,14 +121,16 @@ class DistributedReservoirServer(AsyncReservoirServer):
                  slots_per_shard: int = 8, chunk_steps: int = 16,
                  return_states: bool | None = None,
                  stats: ServeStats | None = None,
-                 chunk_time: float | None = None):
+                 chunk_time: float | None = None,
+                 zero_copy: bool | None = None):
         self.engine = engine
         self.slots_per_shard = slots_per_shard
         self.chunk_steps = chunk_steps
         self.return_states = return_states
         batcher = ShardedContinuousBatcher(
             engine, slots_per_shard=slots_per_shard,
-            chunk_steps=chunk_steps, return_states=return_states)
+            chunk_steps=chunk_steps, return_states=return_states,
+            zero_copy=zero_copy)
         super().__init__(engine, stats=stats, chunk_time=chunk_time,
                          batcher=batcher)
         self.reshards = 0                 # completed shrink operations
@@ -189,12 +191,14 @@ class DistributedReservoirServer(AsyncReservoirServer):
                                 [:new_n].tolist()),
             backend=self.engine.backend, interpret=self.engine.interpret,
             stats=self.engine.stats, vmem_budget=self.engine.vmem_budget,
-            dense_dispatch_density=self.engine.dense_dispatch_density)
+            dense_dispatch_density=self.engine.dense_dispatch_density,
+            specialize=self.engine.specialize)
         self.engine = engine
         self._shard_epochs.append(self.batcher.shard_stats)
         self.batcher = ShardedContinuousBatcher(
             engine, slots_per_shard=self.slots_per_shard,
-            chunk_steps=self.chunk_steps, return_states=self.return_states)
+            chunk_steps=self.chunk_steps, return_states=self.return_states,
+            zero_copy=self.batcher.zero_copy)
 
         for qreq, remaining, state, chunks in carried:
             if chunks:

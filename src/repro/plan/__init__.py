@@ -15,15 +15,27 @@ from repro.plan.plan import (
     ExecutionPlan,
     PlanStats,
     RolloutBand,
+    plan_cache_stats,
     plan_for,
+)
+from repro.plan.specialize import (
+    DEFAULT_BATCH_TILE,
+    RolloutProgram,
+    specialize_rollout,
+    specialize_summary,
 )
 
 __all__ = [
+    "DEFAULT_BATCH_TILE",
     "DEFAULT_VMEM_BUDGET",
     "BandedRollout",
     "BcsrLayout",
     "ExecutionPlan",
     "PlanStats",
     "RolloutBand",
+    "RolloutProgram",
+    "plan_cache_stats",
     "plan_for",
+    "specialize_rollout",
+    "specialize_summary",
 ]

@@ -42,6 +42,7 @@ __all__ = [
     "ExecutionPlan",
     "PlanStats",
     "RolloutBand",
+    "plan_cache_stats",
     "plan_for",
 ]
 
@@ -406,6 +407,20 @@ class ExecutionPlan:
             ones=self._fm.ones,
         )
 
+    def specialize_summary_line(
+            self, mode: str = "fp32",
+            vmem_budget: int | None = DEFAULT_VMEM_BUDGET) -> str:
+        """One-line regime report of the specialized rollout program: the
+        chosen weight-residency regime, on-chip bytes, and how the terms
+        split between folded-tile matmuls and shift-add reductions."""
+        from repro.plan.specialize import specialize_summary
+        s = specialize_summary(self, mode, vmem_budget=vmem_budget)
+        return (f"{s['mode']} {s['regime']} ({s['n_bands']} band(s), "
+                f"{s['resident_bytes']} B on-chip), "
+                f"{s['n_matmul_terms']} matmul terms + "
+                f"{s['n_shiftadd_terms']} shift-add terms "
+                f"({s['shiftadd_digits']} digit adds)")
+
     def fpga_cost(self, input_bits: int = 8) -> costmodel.FPGADesignPoint:
         """The paper's synthesis estimate for this exact structure."""
         return costmodel.design_point(
@@ -431,6 +446,10 @@ class ExecutionPlan:
             f"{s.int8_terms_culled} culled (planes {s.planes_kept}/{s.width})",
             f"  rollout bands (fp32, budget {vmem_budget} B): "
             f"{n_bands} x <= {band_bytes} B tiles",
+            "  specialized: " + self.specialize_summary_line(
+                "fp32", vmem_budget),
+            "  specialized: " + self.specialize_summary_line(
+                "int8", vmem_budget),
             f"  FPGA: ones={s.ones}  LUTs={dp.luts:.0f}  FFs={dp.ffs:.0f}  "
             f"Fmax={dp.fmax_hz / 1e6:.0f} MHz",
             f"  Eq.5 latency: {dp.cycles} cycles = {dp.latency_ns:.1f} ns  "
@@ -439,14 +458,36 @@ class ExecutionPlan:
         return "\n".join(lines)
 
 
+# plan_for cache telemetry.  The cache itself is the matrix instance (the
+# plan rides on ``fm._execution_plan``), so its lifetime is exactly the
+# matrix's — a weakref-per-matrix policy with no process-global growth for
+# a long-lived multi-tenant server to worry about.  The counters let such
+# a server verify that property (and spot a caller accidentally
+# re-compiling matrices instead of reusing them).
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats(reset: bool = False) -> dict:
+    """Cumulative plan_for hit/miss counters (``reset=True`` zeroes them)."""
+    out = dict(_PLAN_CACHE_STATS)
+    if reset:
+        _PLAN_CACHE_STATS.update(hits=0, misses=0)
+    return out
+
+
 def plan_for(fm: FixedMatrix) -> ExecutionPlan:
     """The ExecutionPlan for a compiled matrix, cached per instance.
 
     FixedMatrix is frozen by construction, so the plan — like the paper's
-    place-and-route result — is computed at most once per matrix.
+    place-and-route result — is computed at most once per matrix, and it
+    is released exactly when the matrix is: the cache slot lives on the
+    instance, never in a process-global table.
     """
     plan = getattr(fm, "_execution_plan", None)
     if plan is None or plan._fm is not fm:
         plan = ExecutionPlan(fm)
         fm._execution_plan = plan
+        _PLAN_CACHE_STATS["misses"] += 1
+    else:
+        _PLAN_CACHE_STATS["hits"] += 1
     return plan

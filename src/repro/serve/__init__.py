@@ -9,11 +9,13 @@
 
 from repro.serve.batching import (MicroBatch, PaddingBucketer,  # noqa: F401
                                   RolloutRequest)
-from repro.serve.engine import ReservoirEngine, engine_for  # noqa: F401
+from repro.serve.engine import (ReservoirEngine, engine_cache_clear,  # noqa: F401,E501
+                                engine_cache_stats, engine_for)
 from repro.serve.scheduler import (AsyncReservoirServer,  # noqa: F401
                                    ContinuousBatcher, QueuedRequest)
 from repro.serve.stats import ServeStats  # noqa: F401
 
-__all__ = ["ReservoirEngine", "engine_for", "ServeStats", "PaddingBucketer",
+__all__ = ["ReservoirEngine", "engine_for", "engine_cache_clear",
+           "engine_cache_stats", "ServeStats", "PaddingBucketer",
            "RolloutRequest", "MicroBatch", "AsyncReservoirServer",
            "ContinuousBatcher", "QueuedRequest"]

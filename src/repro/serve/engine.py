@@ -25,7 +25,9 @@ states contract.
 
 from __future__ import annotations
 
+import collections
 import time
+import warnings
 from typing import Sequence
 
 import jax
@@ -33,9 +35,25 @@ import jax.numpy as jnp
 
 from repro.core.esn import ESNParams
 from repro.kernels.reservoir_rollout.ops import FusedRollout
-from repro.plan import DEFAULT_VMEM_BUDGET, plan_for
+from repro.kernels.reservoir_rollout.specialized import SpecializedRollout
+from repro.plan import DEFAULT_VMEM_BUDGET, plan_for, specialize_rollout
+from repro.plan.specialize import int8_recur_reference
 from repro.serve.batching import MicroBatch, PaddingBucketer, RolloutRequest
 from repro.serve.stats import ServeStats
+
+# Buffer donation is a no-op on the CPU backend; jax warns about it on
+# every donated dispatch, which would swamp the zero-copy serve loop's
+# output.  The filter wraps OUR donated dispatches only — never globally,
+# so user code's own donation warnings still surface.
+_DONATION_WARNING = "Some donated buffers were not usable"
+
+
+def donated_call(fn, u, x0b):
+    """Invoke a donated rollout with the no-op-donation warning muted
+    (shared by the single-device and sharded dispatch paths)."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings("ignore", message=_DONATION_WARNING)
+        return fn(u, x0b)
 
 # Below this nonzero-block density the culled block loop beats one dense
 # (B, R) x (R, R) product; above it the MXU/gemm wins.  Reservoirs at the
@@ -51,7 +69,8 @@ class ReservoirEngine:
     def __init__(self, params: ESNParams, *, backend: str = "auto",
                  interpret: bool = True, stats: ServeStats | None = None,
                  dense_dispatch_density: float = DENSE_DISPATCH_DENSITY,
-                 vmem_budget: int | None = DEFAULT_VMEM_BUDGET):
+                 vmem_budget: int | None = DEFAULT_VMEM_BUDGET,
+                 specialize: bool = True):
         assert backend in ("auto", "xla", "pallas"), backend
         self.params = params
         self.config = params.config
@@ -59,47 +78,83 @@ class ReservoirEngine:
         self.stats = stats if stats is not None else ServeStats()
         self.plan = plan_for(params.w)
         self.vmem_budget = vmem_budget
+        self.specialize = specialize
         self._int8 = self.config.mode.startswith("int8")
         # Readout captured at construction; engine_for invalidates the
         # cached engine when params.w_out is replaced (fit_readout).
         self._w_out = params.w_out
         # plan.block_density (not plan.stats) keeps the fp32 path from
         # paying for the integer lowering just to make a dispatch decision
+        self._dense_density = dense_dispatch_density
         self.uses_dense = (not self._int8 and
                            self.plan.block_density >= dense_dispatch_density)
+        # specialized int8: block-dense matrices take one folded int32
+        # gemm (the whole digit-plane fold), block-sparse ones the
+        # program's culled folded/shift-add schedule
+        self._int8_dense = (self._int8 and specialize and
+                            self.plan.block_density >= dense_dispatch_density)
+        # trace-time tick per compiled rollout: the recompilation guard
+        # (N chunks must trace once per shape/regime, never per chunk)
+        self._xla_traces: collections.Counter = collections.Counter()
         if self.backend == "pallas":
-            self._fused = FusedRollout(
+            cls = SpecializedRollout if specialize else FusedRollout
+            self._fused = cls(
                 self.plan, params.w_in, leak=self.config.leak,
                 mode="int8" if self._int8 else "fp32",
                 state_bits=self.config.state_bits, interpret=interpret,
                 w_out=self._w_out, vmem_budget=vmem_budget)
         else:
-            # jitted rollouts keyed on (with_readout, with_final); built
-            # lazily except the plain states path every caller hits first.
-            self._xla_fns = {(False, False): self._build_xla_fn(False, False)}
+            # jitted rollouts keyed on (with_readout, with_final, donated);
+            # built lazily except the plain states path every caller hits
+            # first.
+            self._xla_fns = {
+                (False, False, False): self._build_xla_fn(False, False)}
 
-    def _xla(self, with_readout: bool, with_final: bool):
-        fn = self._xla_fns.get((with_readout, with_final))
+    def _xla(self, with_readout: bool, with_final: bool,
+             donate: bool = False):
+        key = (with_readout, with_final, donate)
+        fn = self._xla_fns.get(key)
         if fn is None:
-            fn = self._xla_fns[(with_readout, with_final)] = \
-                self._build_xla_fn(with_readout, with_final)
+            fn = self._xla_fns[key] = self._build_xla_fn(
+                with_readout, with_final, donate)
         return fn
 
     # -- fused XLA rollout ---------------------------------------------------
-    def _build_xla_fn(self, with_readout: bool, with_final: bool):
+    def _build_xla_fn(self, with_readout: bool, with_final: bool,
+                      donate: bool = False):
         params, cfg = self.params, self.config
         w, w_in = params.w, params.w_in
         int8 = self._int8
         leak = cfg.leak
         smax = (1 << (cfg.state_bits - 1)) - 1
+        dim = cfg.reservoir_dim
+        plan = self.plan
         w_out = jnp.asarray(self._w_out, jnp.float32) if with_readout else None
+        traces = self._xla_traces
         # The engine may be constructed lazily inside someone else's jit
         # trace (run_reservoir under jax.jit); the dense closure constant
         # must be materialized eagerly or it leaks that trace.
         with jax.ensure_compile_time_eval():
             w_dense = w.dense_f32() if self.uses_dense else None
+            # Specialized int8: constant-propagate the 2^w plane scales
+            # and signs at build time.  Block-dense matrices fold ALL
+            # planes into the quantized matrix — one int32 gemm replaces
+            # the width shifted pos/neg plane products, bit-identically
+            # (int32 accumulation is exact).  Block-sparse ones run the
+            # program's culled folded/shift-add schedule.
+            q_folded = w.q.astype(jnp.int32) if self._int8_dense else None
+            program = None
+            if int8 and self.specialize and not self._int8_dense:
+                program = specialize_rollout(
+                    plan, "int8", vmem_budget=self.vmem_budget)
+        schedule = self.xla_schedule
 
         def rollout(u_bt: jnp.ndarray, x0: jnp.ndarray) -> jnp.ndarray:
+            # trace-time side effect: the recompilation-guard counter
+            # (donate is part of the key — the donated variant is a
+            # legitimately distinct program, not a recompile)
+            traces[(u_bt.shape, with_readout, with_final, donate,
+                    schedule)] += 1
             # One gemm projects every input of every step before the scan.
             uproj = u_bt.astype(jnp.float32) @ w_in          # (B, T, R)
             uproj_t = jnp.swapaxes(uproj, 0, 1)              # (T, B, R)
@@ -108,8 +163,14 @@ class ReservoirEngine:
                 if int8:
                     xq = jnp.clip(jnp.round(x * smax), -smax - 1,
                                   smax).astype(jnp.int32)
-                    recur = w.matvec_int_exact(xq).astype(jnp.float32)
-                    recur = recur * (w.scale / smax)
+                    if q_folded is not None:
+                        ri = xq @ q_folded
+                    elif program is not None:
+                        ri = int8_recur_reference(
+                            program, xq, plan.rows_pad, dim)
+                    else:
+                        ri = w.matvec_int_exact(xq)
+                    recur = ri.astype(jnp.float32) * (w.scale / smax)
                 elif w_dense is not None:
                     recur = x @ w_dense
                 else:
@@ -132,10 +193,40 @@ class ReservoirEngine:
                 return out, xf
             return out
 
-        return jax.jit(rollout)
+        # Donating x0 lets XLA reuse the carried-state buffer for the
+        # emitted final state — the zero-copy half of the chunk API.
+        return jax.jit(rollout, donate_argnums=(1,) if donate else ())
 
     # -- backend dispatch ----------------------------------------------------
-    def _local_rollout(self, with_readout: bool, with_final: bool):
+    @property
+    def xla_schedule(self) -> str:
+        """Which specialized XLA recurrence this engine compiled."""
+        if not self._int8:
+            return "fp32-dense" if self.uses_dense else "fp32-culled"
+        if self._int8_dense:
+            return "int8-folded-dense"
+        if self.specialize:
+            return "int8-folded-culled"
+        return "int8-planes"
+
+    @property
+    def program(self):
+        """The pallas backend's :class:`~repro.plan.RolloutProgram` (None
+        on the XLA backend or with ``specialize=False``)."""
+        return getattr(getattr(self, "_fused", None), "program", None)
+
+    @property
+    def trace_counts(self) -> collections.Counter:
+        """Rollout traces per (shape, outputs, regime/schedule) — the
+        recompilation guard: rolling N chunks of one shape must leave
+        every count at exactly 1."""
+        fused = getattr(self, "_fused", None)
+        if fused is not None and hasattr(fused, "trace_counts"):
+            return self._xla_traces + fused.trace_counts
+        return collections.Counter(self._xla_traces)
+
+    def _local_rollout(self, with_readout: bool, with_final: bool,
+                       donate: bool = False):
         """The pure ``(B, T, I), (B, R) -> (B, T, *)`` rollout callable.
 
         Batch rows are independent through it (the recurrence never mixes
@@ -145,22 +236,26 @@ class ReservoirEngine:
         """
         if self.backend == "pallas":
             fused = self._fused
+            kw = {"donate_state": donate} if isinstance(
+                fused, SpecializedRollout) else {}
 
             def fn(u_bt, x0):
                 out = fused(jnp.swapaxes(u_bt, 0, 1), x0,
                             return_states=not with_readout,
                             return_preds=with_readout,
-                            return_final=with_final)
+                            return_final=with_final, **kw)
                 y, xf = out if with_final else (out, None)
                 y = jnp.swapaxes(y, 0, 1)
                 return (y, xf) if with_final else y
 
             return fn
-        return self._xla(with_readout, with_final)
+        return self._xla(with_readout, with_final, donate)
 
-    def _dispatch(self, u, x0b, with_readout: bool, with_final: bool):
+    def _dispatch(self, u, x0b, with_readout: bool, with_final: bool,
+                  donate: bool = False):
         """One fused rollout call -> ``(out, final_state_or_None)``."""
-        out = self._local_rollout(with_readout, with_final)(u, x0b)
+        fn = self._local_rollout(with_readout, with_final, donate)
+        out = donated_call(fn, u, x0b) if donate else fn(u, x0b)
         return out if with_final else (out, None)
 
     # -- public API ----------------------------------------------------------
@@ -185,31 +280,44 @@ class ReservoirEngine:
                 x0b = jnp.broadcast_to(x0b, (b, dim))
         return u, x0b, single
 
-    def _record(self, out, batch, steps, t0, real_steps):
+    def _record(self, out, batch, steps, t0, real_steps, defer=False):
         # Under an outer jit/vmap/grad trace the inputs are tracers: still
         # composable (the jitted fn nests), but timing/stats are meaningless
         # there — skip them instead of calling block_until_ready on a tracer.
         if not isinstance(out, jax.core.Tracer):
-            out.block_until_ready()
+            if not defer:
+                out.block_until_ready()
+            # defer=True is the zero-copy serve loop: no host sync per
+            # chunk — the recorded time is dispatch-side only (the
+            # device->host wait lands at slot retirement), so the call is
+            # flagged in the stats and throughput should be read from the
+            # scheduler's makespan clock, not ServeStats.seconds.
             self.stats.record_call(batch=batch, steps=steps,
                                    seconds=time.perf_counter() - t0,
-                                   real_steps=real_steps)
+                                   real_steps=real_steps, deferred=defer)
         return out
 
     def rollout(self, inputs: jnp.ndarray,
                 x0: jnp.ndarray | None = None,
                 real_steps: int | None = None,
-                return_final_state: bool = False):
+                return_final_state: bool = False, *,
+                donate_state: bool = False,
+                defer_sync: bool = False):
         """Roll the reservoir: (T, I) -> (T, R) or (B, T, I) -> (B, T, R).
 
         With ``return_final_state=True`` also returns x(T) — (R,) / (B, R)
         — the carry a later chunked call resumes from bit-identically.
+        ``donate_state=True`` donates the ``x0`` buffer to the launch (the
+        caller must not reuse it; the chunked scheduler owns its carry) and
+        ``defer_sync=True`` skips the per-call host sync so the serve loop
+        only waits for the device at retirement.
         """
         u, x0b, single = self._prepare(inputs, x0)
         b, t, _ = u.shape
         t0 = time.perf_counter()
-        states, xf = self._dispatch(u, x0b, False, return_final_state)
-        self._record(states, b, t, t0, real_steps)
+        states, xf = self._dispatch(u, x0b, False, return_final_state,
+                                    donate_state and return_final_state)
+        self._record(states, b, t, t0, real_steps, defer=defer_sync)
         if return_final_state:
             return (states[0], xf[0]) if single else (states, xf)
         return states[0] if single else states
@@ -217,14 +325,18 @@ class ReservoirEngine:
     def predictions(self, inputs: jnp.ndarray,
                     x0: jnp.ndarray | None = None,
                     real_steps: int | None = None,
-                    return_final_state: bool = False):
+                    return_final_state: bool = False, *,
+                    donate_state: bool = False,
+                    defer_sync: bool = False):
         """Fused-readout rollout: (B, T, I) -> (B, T, O) predictions.
 
         ``W_out`` is applied inside the rollout (scan body / Pallas
         epilogue), so the (B, T, R) state trajectory is never materialized.
         ``return_final_state=True`` additionally returns x(T), letting the
         continuous scheduler serve predictions chunk by chunk while
-        carrying reservoir state between chunks.
+        carrying reservoir state between chunks.  ``donate_state`` /
+        ``defer_sync`` are the zero-copy chunk-serving knobs (see
+        :meth:`rollout`).
         """
         if self._w_out is None:
             raise ValueError("readout not trained; call fit_readout first "
@@ -232,8 +344,9 @@ class ReservoirEngine:
         u, x0b, single = self._prepare(inputs, x0)
         b, t, _ = u.shape
         t0 = time.perf_counter()
-        preds, xf = self._dispatch(u, x0b, True, return_final_state)
-        self._record(preds, b, t, t0, real_steps)
+        preds, xf = self._dispatch(u, x0b, True, return_final_state,
+                                   donate_state and return_final_state)
+        self._record(preds, b, t, t0, real_steps, defer=defer_sync)
         if return_final_state:
             return (preds[0], xf[0]) if single else (preds, xf)
         return preds[0] if single else preds
@@ -265,24 +378,53 @@ class ReservoirEngine:
         return results
 
 
+# -- bounded engine cache ----------------------------------------------------
+# A long-lived multi-tenant server cycles through many reservoirs; an
+# unbounded per-process cache of compiled engines would grow without limit.
+# The cache is a module-level LRU keyed by (id(params), backend).  A cached
+# engine holds its params alive, so a live entry's id can never be reused
+# by a different object; after eviction an id *can* recur, which the
+# identity staleness check below catches before serving a wrong engine.
+ENGINE_CACHE_MAX = 32
+_engine_cache: "collections.OrderedDict[tuple, tuple]" = \
+    collections.OrderedDict()
+_engine_cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def engine_cache_stats(reset: bool = False) -> dict:
+    """Hit/miss/eviction counters of the ``engine_for`` LRU (plus current
+    size); ``reset=True`` zeroes the counters."""
+    out = dict(_engine_cache_stats, size=len(_engine_cache))
+    if reset:
+        _engine_cache_stats.update(hits=0, misses=0, evictions=0)
+    return out
+
+
+def engine_cache_clear() -> None:
+    _engine_cache.clear()
+
+
 def engine_for(params: ESNParams, backend: str = "auto",
                **kwargs) -> ReservoirEngine:
-    """Engine accessor with a per-params cache (reservoirs are frozen).
+    """Engine accessor with a bounded LRU cache (reservoirs are frozen).
 
-    Cached per backend so repeated ``run_reservoir(engine="pallas")`` calls
-    reuse the compiled rollout instead of rebuilding plan + jit each time.
-    The cache key includes the identity of everything the engine bakes in
-    at construction — the reservoir matrix, the *readout* (so a stale
-    compiled rollout is never served after ``fit_readout`` replaces
-    ``w_out``), and the leak/mode/precision config.  Non-default kwargs
-    (stats, interpret, ...) bypass the cache — construct
-    :class:`ReservoirEngine` directly for those.
+    Cached per (params, backend) so repeated ``run_reservoir`` calls reuse
+    the compiled rollout instead of rebuilding plan + jit each time.  The
+    entry is invalidated by everything the engine bakes in at construction
+    — the reservoir matrix, the *readout* (so a stale compiled rollout is
+    never served after ``fit_readout`` replaces ``w_out``), and the
+    leak/mode/precision config.  At most :data:`ENGINE_CACHE_MAX` engines
+    stay resident (least recently used evicted first), so a multi-tenant
+    server's memory is bounded — ``engine_cache_stats()`` exposes the
+    hit/miss/eviction counters.  NOTE: a cached engine holds its params
+    (and compiled programs) alive until it is evicted or
+    ``engine_cache_clear()`` runs — the cache trades bounded pinning for
+    compile reuse.  Non-default kwargs (stats, interpret, specialize,
+    ...) bypass the cache — construct :class:`ReservoirEngine` directly
+    for those.
     """
-    key = "xla" if backend == "auto" else backend
-    cache = getattr(params, "_serve_engines", None)
-    if cache is None:
-        cache = params._serve_engines = {}
-    eng = cache.get(key)
+    key = (id(params), "xla" if backend == "auto" else backend)
+    eng = _engine_cache.get(key)
     cfg = params.config
     stale = (eng is None or eng.params is not params
              or eng._w_out is not params.w_out
@@ -292,9 +434,18 @@ def engine_for(params: ESNParams, backend: str = "auto",
     if stale or kwargs:
         eng = ReservoirEngine(params, backend=backend, **kwargs)
         if not kwargs:
-            cache[key] = eng
+            _engine_cache[key] = eng
+            _engine_cache.move_to_end(key)
+            while len(_engine_cache) > ENGINE_CACHE_MAX:
+                _engine_cache.popitem(last=False)
+                _engine_cache_stats["evictions"] += 1
+            _engine_cache_stats["misses"] += 1
+    else:
+        _engine_cache.move_to_end(key)
+        _engine_cache_stats["hits"] += 1
     return eng
 
 
-__all__ = ["ReservoirEngine", "engine_for", "ServeStats", "PaddingBucketer",
-           "RolloutRequest", "MicroBatch"]
+__all__ = ["ENGINE_CACHE_MAX", "ReservoirEngine", "engine_for",
+           "engine_cache_clear", "engine_cache_stats", "ServeStats",
+           "PaddingBucketer", "RolloutRequest", "MicroBatch"]

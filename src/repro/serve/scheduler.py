@@ -29,6 +29,7 @@ import heapq
 import time
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -71,6 +72,21 @@ class QueuedRequest:
         return self.request.length
 
 
+class _DeviceChunk:
+    """One chunk's full (n_slots, cs, O) device output, shared by every
+    sequence that rode in it and host-converted at most once — the
+    device->host sync happens when the first rider retires, never in the
+    chunk loop.  At conversion every rider's reference is compacted to
+    its own trimmed row copy, so neither the device buffer nor the
+    full-width host array outlives the sync (a long-lived rider would
+    otherwise pin pool-width buffers for its whole life)."""
+
+    __slots__ = ("dev",)
+
+    def __init__(self, dev):
+        self.dev = dev
+
+
 class ContinuousBatcher:
     """A fixed pool of batch slots rolled forward ``chunk_steps`` at a time.
 
@@ -84,7 +100,8 @@ class ContinuousBatcher:
     """
 
     def __init__(self, engine, *, n_slots: int = 8, chunk_steps: int = 16,
-                 return_states: bool | None = None):
+                 return_states: bool | None = None,
+                 zero_copy: bool | None = None, warm: bool = True):
         assert n_slots >= 1 and chunk_steps >= 1
         self.engine = engine
         self.n_slots = n_slots
@@ -92,14 +109,81 @@ class ContinuousBatcher:
         if return_states is None:
             return_states = not engine.has_readout
         self.return_states = return_states
+        # zero-copy chunk serving: request inputs move to the device ONCE
+        # at admission (into a resident (n_slots, max_chunks, cs, I)
+        # buffer), a single jitted gather assembles each chunk's input
+        # on-device, the carried state buffer is donated to each launch,
+        # chunk outputs stay device-side, and the only device->host syncs
+        # in the hot loop happen at slot retirement (``host_syncs`` counts
+        # them).  The hot loop dispatches a constant handful of device
+        # ops per chunk, independent of pool size.
+        #
+        # Default is backend-aware: on an accelerator the elided
+        # transfers and deferred syncs are the win; on the CPU backend a
+        # "transfer" is a memcpy while every extra dispatch costs real
+        # Python/XLA overhead (measured ~2x per-chunk cost), so CPU
+        # defaults to the host-assembled path.  Both paths produce
+        # identical outputs and both are tested.
+        if zero_copy is None:
+            zero_copy = jax.default_backend() != "cpu"
+        self.zero_copy = zero_copy
+        self.host_syncs = 0
         self._in_dim = engine.config.input_dim
         self._dim = engine.config.reservoir_dim
         self._slots: list[QueuedRequest | None] = [None] * n_slots
         self._pos = [0] * n_slots               # steps consumed per slot
         self._chunks: list[list] = [[] for _ in range(n_slots)]
         self._states = jnp.zeros((n_slots, self._dim), jnp.float32)
+        self._max_chunks = 4                    # input lanes; doubles on
+        #                                         demand (longer requests)
+        if zero_copy:
+            self._u_dev = jnp.zeros(
+                (n_slots, self._max_chunks, chunk_steps, self._in_dim),
+                jnp.float32)
+            self._gather = jax.jit(
+                lambda u_dev, idx:
+                u_dev[jnp.arange(u_dev.shape[0]), idx])
+            # donated in-place lane write: admission cost stays O(request)
+            # on accelerators instead of copying the whole pooled buffer
+            self._lane_set = jax.jit(
+                lambda buf, slot, lanes: jax.lax.dynamic_update_slice(
+                    buf, lanes[None], (slot, 0, 0, 0)),
+                donate_argnums=(0,))
         self.last_take: dict = {}               # slot -> steps, last chunk
         self.last_retired_slots: list = []
+        if warm:
+            self._warm()
+
+    def _warm(self) -> None:
+        """Pre-compile the pool's exact chunk program + per-slot ops.
+
+        The batcher owns one static shape for its whole life, so every
+        program it will ever run can compile at construction: the
+        (donated) chunk rollout, the input gather, and admission's
+        per-slot state seeding — none of it lands in the measured serving
+        makespan.  Bypasses the engine's public API so warmup never
+        pollutes ``ServeStats`` or the request telemetry.
+        """
+        if not self.return_states and not self.engine.has_readout:
+            return      # run_chunk will raise the clear "readout not
+            #             trained" error; nothing sane to warm
+        x0 = jnp.zeros((self.n_slots, self._dim), jnp.float32)
+        if self.zero_copy:
+            u = self._gather(self._u_dev,
+                             jnp.zeros(self.n_slots, jnp.int32))
+            # admission's device ops: one warm call each compiles the
+            # program every slot index reuses (the index is an operand)
+            row = jnp.zeros((self._dim,), jnp.float32)
+            self._states.at[0].set(row)
+            self._u_dev = self._lane_set(
+                self._u_dev, 0,
+                jnp.zeros(self._u_dev.shape[1:], jnp.float32))
+        else:
+            u = jnp.zeros((self.n_slots, self.chunk_steps, self._in_dim),
+                          jnp.float32)
+        out, _xf = self.engine._dispatch(u, x0, not self.return_states,
+                                         True, self.zero_copy)
+        jax.block_until_ready(out)
 
     @property
     def live(self) -> int:
@@ -120,6 +204,29 @@ class ContinuousBatcher:
         self._slots[slot] = qreq
         self._pos[slot] = 0
         self._chunks[slot] = []
+        if self.zero_copy:
+            # ONE host->device transfer per request: the whole input,
+            # pre-cut into chunk_steps segments, lands in the slot's lane
+            # of the resident input buffer.  Lanes double when a request
+            # is longer than any seen before (shape change -> the gather
+            # re-specializes once, then stays cached).
+            cs = self.chunk_steps
+            seg = np.asarray(qreq.request.inputs, np.float32)
+            n_chunks = max(1, -(-seg.shape[0] // cs))
+            if n_chunks > self._max_chunks:
+                while n_chunks > self._max_chunks:
+                    self._max_chunks *= 2
+                # one reallocation straight to the final lane count
+                self._u_dev = jnp.zeros(
+                    (self.n_slots, self._max_chunks, cs, self._in_dim),
+                    jnp.float32).at[:, : self._u_dev.shape[1]].set(
+                        self._u_dev)
+            padded = np.zeros((self._max_chunks * cs,) + seg.shape[1:],
+                              np.float32)
+            padded[: seg.shape[0]] = seg
+            self._u_dev = self._lane_set(
+                self._u_dev, slot,
+                jnp.asarray(padded.reshape(self._max_chunks, cs, -1)))
         x0 = qreq.request.x0
         row = (jnp.zeros((self._dim,), jnp.float32) if x0 is None
                else jnp.asarray(x0, jnp.float32))
@@ -139,31 +246,63 @@ class ContinuousBatcher:
         cannot reach them).
         """
         cs = self.chunk_steps
-        u = np.zeros((self.n_slots, cs, self._in_dim), np.float32)
         take: dict[int, int] = {}
-        for i, q in enumerate(self._slots):
-            if q is None:
-                continue
-            seg = np.asarray(q.request.inputs[self._pos[i]:self._pos[i] + cs],
-                             np.float32)
-            u[i, :len(seg)] = seg
-            take[i] = len(seg)
+        if self.zero_copy:
+            # ONE jitted gather assembles the (n_slots, cs, I) chunk from
+            # the device-resident input buffer — no host->device copy and
+            # no per-slot dispatch in the hot loop.  Free slots gather
+            # lane 0 (stale or zero rows): their output is discarded and
+            # their state is re-seeded at admission, so the rows are
+            # inert ballast exactly like the zero rows of the host path.
+            idx = np.zeros(self.n_slots, np.int32)
+            for i, q in enumerate(self._slots):
+                if q is None:
+                    continue
+                idx[i] = self._pos[i] // cs
+                take[i] = min(cs, q.length - self._pos[i])
+            u = self._gather(self._u_dev, jnp.asarray(idx))
+        else:
+            u_host = np.zeros((self.n_slots, cs, self._in_dim), np.float32)
+            for i, q in enumerate(self._slots):
+                if q is None:
+                    continue
+                seg = np.asarray(
+                    q.request.inputs[self._pos[i]:self._pos[i] + cs],
+                    np.float32)
+                u_host[i, :len(seg)] = seg
+                take[i] = len(seg)
+            u = jnp.asarray(u_host)
         fn = (self.engine.rollout if self.return_states
               else self.engine.predictions)
-        out, xf = fn(jnp.asarray(u), x0=self._states,
-                     real_steps=sum(take.values()), return_final_state=True)
-        out = np.asarray(out)
+        # zero-copy: the carried state buffer is donated to the launch
+        # (this batcher owns it and immediately replaces it with xf), and
+        # the per-chunk host sync is deferred to retirement
+        out, xf = fn(u, x0=self._states, real_steps=sum(take.values()),
+                     return_final_state=True, donate_state=self.zero_copy,
+                     defer_sync=self.zero_copy)
+        if not self.zero_copy:
+            self.host_syncs += 1
+            out = np.asarray(out)
         self._states = xf
         retired = []
         retired_slots = []
+        chunk = _DeviceChunk(out) if self.zero_copy else None
         for i, n in take.items():
-            q = self._slots[i]
-            # copy: a bare out[i, :n] view would pin the whole
-            # (n_slots, chunk_steps, O) chunk buffer until retirement
-            self._chunks[i].append(out[i, :n].copy())
+            if self.zero_copy:
+                # the whole device-side chunk buffer is shared by its
+                # riders (each remembering its real length); no per-slot
+                # device op, no host transfer until a rider retires
+                self._chunks[i].append((chunk, n))
+            else:
+                self._chunks[i].append(out[i, :n].copy())
             self._pos[i] += n
+        # retire in a second pass: a retirement materializes the shared
+        # chunk buffer (rewriting every rider's entry), so every rider
+        # must have its entry before the first retiree triggers that
+        for i in take:
+            q = self._slots[i]
             if self._pos[i] >= q.length:
-                retired.append((q, np.concatenate(self._chunks[i], axis=0)))
+                retired.append((q, self._assemble(i)))
                 retired_slots.append(i)
                 self._slots[i] = None
                 self._chunks[i] = []
@@ -171,6 +310,64 @@ class ContinuousBatcher:
         self.last_take = dict(take)
         self.last_retired_slots = retired_slots
         return retired, sum(take.values())
+
+    def _materialize(self, chunk: _DeviceChunk) -> None:
+        """THE deferred device->host sync point, paid once per chunk
+        buffer no matter how many riders retire from it, and only ever
+        reached from retirement/snapshot paths.  Every rider's entry is
+        rewritten to its own trimmed row copy, so the full-width buffer
+        (device AND host) is immediately collectable — a long-lived rider
+        never pins pool-width chunk buffers."""
+        host = np.asarray(chunk.dev)
+        chunk.dev = None
+        self.host_syncs += 1
+        for s, entries in enumerate(self._chunks):
+            for j, (c, n) in enumerate(entries):
+                if c is chunk:
+                    entries[j] = (host[s, :n].copy(), n)
+
+    def _slot_rows(self, slot: int) -> list:
+        """A slot's chunk outputs as trimmed host rows (zero-copy path),
+        materializing any still-device-side buffers."""
+        entries = self._chunks[slot]
+        for idx in range(len(entries)):
+            c, _n = entries[idx]
+            if isinstance(c, _DeviceChunk):
+                self._materialize(c)            # rewrites entries[idx]
+        return [row for row, _n in entries]
+
+    def remaining_inputs(self, slot: int) -> np.ndarray:
+        """A live slot's not-yet-consumed input steps, (T_left, I) float32.
+
+        On the zero-copy path the device-resident lane is the source of
+        truth — the caller's host buffer was free to be reused the moment
+        ``admit()`` uploaded it, so the elastic-shrink snapshot must NOT
+        re-read it."""
+        q = self._slots[slot]
+        lo = self._pos[slot]
+        if not self.zero_copy:
+            return np.asarray(q.request.inputs, np.float32)[lo:]
+        cs = self.chunk_steps
+        n_chunks = max(1, -(-q.length // cs))
+        flat = np.asarray(self._u_dev[slot, :n_chunks]).reshape(
+            n_chunks * cs, self._in_dim)
+        return flat[lo: q.length]
+
+    def chunk_outputs(self, slot: int) -> list:
+        """Host copies of a live slot's chunks so far (syncs; used by the
+        elastic-shrink snapshot, not the hot loop)."""
+        if self.zero_copy:
+            return self._slot_rows(slot)
+        return list(self._chunks[slot])
+
+    def _assemble(self, slot: int) -> np.ndarray:
+        """Concatenate a retiring slot's chunks into its full output.
+
+        On the zero-copy path the underlying buffers sync (at most once
+        each) here — at retirement, never in the chunk loop."""
+        if self.zero_copy:
+            return np.concatenate(self._slot_rows(slot), axis=0)
+        return np.concatenate(self._chunks[slot], axis=0)
 
 
 class AsyncReservoirServer:
@@ -193,10 +390,11 @@ class AsyncReservoirServer:
                  return_states: bool | None = None,
                  stats: ServeStats | None = None,
                  chunk_time: float | None = None,
-                 batcher: ContinuousBatcher | None = None):
+                 batcher: ContinuousBatcher | None = None,
+                 zero_copy: bool | None = None):
         self.batcher = batcher if batcher is not None else ContinuousBatcher(
             engine, n_slots=n_slots, chunk_steps=chunk_steps,
-            return_states=return_states)
+            return_states=return_states, zero_copy=zero_copy)
         self.stats = stats if stats is not None else engine.stats
         self.chunk_time = chunk_time
         self.now = 0.0

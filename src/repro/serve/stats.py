@@ -16,6 +16,11 @@ from typing import Sequence
 @dataclasses.dataclass
 class ServeStats:
     calls: int = 0                 # engine invocations (microbatches)
+    deferred_calls: int = 0        # calls timed dispatch-side only (the
+    #                                zero-copy serve loop defers the host
+    #                                sync to retirement, so ``seconds``
+    #                                under-counts for these — read
+    #                                throughput from the scheduler clock)
     sequences: int = 0             # sequences rolled (incl. padding rows)
     steps_real: int = 0            # steps requested by callers
     steps_padded: int = 0          # steps actually executed
@@ -31,6 +36,7 @@ class ServeStats:
     chunks: int = 0                # scheduler chunks executed
     queue_wait_s: float = 0.0      # summed arrival -> admission wait
     queue_wait_max_s: float = 0.0
+    first_outputs: int = 0         # requests whose first prediction landed
     ttfp_s: float = 0.0            # summed arrival -> first prediction
     ttfp_max_s: float = 0.0
     slot_steps_live: int = 0       # chunk steps that consumed real input
@@ -41,10 +47,11 @@ class ServeStats:
 
     # additive counters merge() sums across shards; the *_max_s fields are
     # maxed and latency_ewma_s is calls-weighted instead.
-    _SUM_FIELDS = ("calls", "sequences", "steps_real", "steps_padded",
+    _SUM_FIELDS = ("calls", "deferred_calls", "sequences", "steps_real",
+                   "steps_padded",
                    "seconds", "enqueued", "admitted", "completed",
-                   "timed_out", "chunks", "queue_wait_s", "ttfp_s",
-                   "slot_steps_live", "slot_steps_total")
+                   "timed_out", "chunks", "queue_wait_s", "first_outputs",
+                   "ttfp_s", "slot_steps_live", "slot_steps_total")
 
     @staticmethod
     def merge(parts: "Sequence[ServeStats]",
@@ -75,10 +82,16 @@ class ServeStats:
         return merged
 
     def record_call(self, *, batch: int, steps: int, seconds: float,
-                    real_steps: int | None = None) -> None:
-        """Account one rollout call of ``batch`` sequences x ``steps``."""
+                    real_steps: int | None = None,
+                    deferred: bool = False) -> None:
+        """Account one rollout call of ``batch`` sequences x ``steps``.
+
+        ``deferred=True`` marks a call whose ``seconds`` covers dispatch
+        only (no host sync) — tracked so readers know when the timing
+        columns are dispatch-side."""
         padded = batch * steps
         self.calls += 1
+        self.deferred_calls += deferred
         self.sequences += batch
         self.steps_padded += padded
         self.steps_real += padded if real_steps is None else real_steps
@@ -101,6 +114,7 @@ class ServeStats:
 
     def record_first_output(self, ttfp_s: float) -> None:
         """First chunk of output ready, ``ttfp_s`` after the arrival."""
+        self.first_outputs += 1
         self.ttfp_s += ttfp_s
         self.ttfp_max_s = max(self.ttfp_max_s, ttfp_s)
 
@@ -144,8 +158,11 @@ class ServeStats:
 
     @property
     def mean_ttfp_s(self) -> float:
-        """Mean arrival -> first-prediction latency."""
-        return self.ttfp_s / self.admitted if self.admitted else 0.0
+        """Mean arrival -> first-prediction latency, over the requests
+        that actually produced output — admitted-but-still-silent requests
+        (and the zero-completions case, e.g. every request timed out in
+        the queue) don't skew or crash the mean."""
+        return self.ttfp_s / self.first_outputs if self.first_outputs else 0.0
 
     @property
     def slot_occupancy(self) -> float:
@@ -166,6 +183,10 @@ class ServeStats:
             "padding_efficiency": self.padding_efficiency,
             "latency_ewma_ms": self.latency_ewma_s * 1e3,
         }
+        if self.deferred_calls:
+            # timing columns are dispatch-side for these calls; makespan
+            # clocks (AsyncReservoirServer.now) carry the honest number
+            out["deferred_calls"] = self.deferred_calls
         if self.enqueued:
             out.update({
                 "enqueued": self.enqueued,

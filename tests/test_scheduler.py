@@ -351,3 +351,228 @@ class TestContinuousBatcherUnit:
         (qb, out_b), = retired
         assert qb.uid == "b" and out_b.shape == (12, 2)
         assert real == 4                        # b's last 4 of 12 steps
+
+
+class TestRecompilationGuard:
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_n_chunks_trace_once_per_shape(self, backend):
+        """Rolling N chunks through the async server must trace the
+        rollout exactly once per (shape, regime) — a cache-key regression
+        that recompiles per chunk fails this immediately."""
+        p = _params()
+        eng, srv = _server(p, backend=backend, n_slots=4, chunk_steps=4)
+        for r in _requests([16, 16, 16, 16, 16, 16], seed=5):
+            srv.submit(r)
+        srv.run()
+        assert eng.stats.chunks >= 6            # plenty of chunks ran...
+        counts = eng.trace_counts
+        assert counts, "trace counter never ticked"
+        assert all(n == 1 for n in counts.values()), dict(counts)
+        assert len(counts) == 1                 # ...over ONE chunk shape
+
+    def test_trace_count_grows_only_on_new_shape(self):
+        p = _params()
+        eng = ReservoirEngine(p, stats=ServeStats())
+        u1 = jnp.zeros((2, 4, 1), jnp.float32)
+        eng.predictions(u1, return_final_state=True)
+        eng.predictions(u1, return_final_state=True)
+        assert sum(eng.trace_counts.values()) == 1
+        eng.predictions(jnp.zeros((2, 8, 1), jnp.float32),
+                        return_final_state=True)
+        assert sum(eng.trace_counts.values()) == 2
+
+
+class TestZeroCopyServing:
+    def test_host_syncs_only_at_retirement(self):
+        """The zero-copy hot loop defers every device->host transfer to
+        slot retirement: chunks that retire nothing sync nothing."""
+        p = _params()
+        eng = ReservoirEngine(p, stats=ServeStats())
+        cb = ContinuousBatcher(eng, n_slots=2, chunk_steps=4,
+                               zero_copy=True)
+        from repro.serve.scheduler import QueuedRequest
+        cb.admit(QueuedRequest(RolloutRequest(
+            uid="a", inputs=np.ones((12, 1), np.float32))))
+        cb.admit(QueuedRequest(RolloutRequest(
+            uid="b", inputs=np.ones((8, 1), np.float32))))
+        retired, _ = cb.run_chunk()             # nobody finishes...
+        assert not retired
+        assert cb.host_syncs == 0               # ...so nothing synced
+        retired, _ = cb.run_chunk()             # b retires at step 8
+        assert [q.uid for q, _ in retired] == ["b"]
+        assert cb.host_syncs == 2               # b's two chunk buffers
+        retired, _ = cb.run_chunk()             # a retires at step 12
+        assert [q.uid for q, _ in retired] == ["a"]
+        # a's first two buffers were already synced by b's retirement
+        # (shared chunk buffers sync at most once); only chunk 3 is new
+        assert cb.host_syncs == 3
+
+    def test_shared_chunk_buffer_syncs_once(self):
+        p = _params()
+        eng, srv = _server(p, n_slots=2, chunk_steps=4, zero_copy=True)
+        for r in _requests([8, 8], seed=6):     # same slots, same chunks
+            srv.submit(r)
+        res = srv.run()
+        assert len(res) == 2
+        # 2 chunks ran; both retirements share the same 2 buffers
+        assert srv.batcher.host_syncs == 2
+        assert srv.batcher.host_syncs <= eng.stats.chunks
+
+    def test_zero_copy_output_matches_legacy_path(self):
+        p = _params()
+        outs = {}
+        for zero_copy in (False, True):
+            eng = ReservoirEngine(p, stats=ServeStats())
+            batcher = ContinuousBatcher(eng, n_slots=3, chunk_steps=4,
+                                        zero_copy=zero_copy)
+            srv = AsyncReservoirServer(eng, batcher=batcher, chunk_time=1.0)
+            for r in _requests([10, 7, 13], seed=7):
+                srv.submit(r)
+            outs[zero_copy] = srv.run()
+        assert set(outs[True]) == set(outs[False])
+        for uid in outs[True]:
+            assert (outs[True][uid] == outs[False][uid]).all()
+
+    def test_sharded_server_zero_copy_passthrough(self):
+        """The sharded server exposes the same zero_copy knob and serves
+        identical outputs either way (carried across a shrink rebuild
+        via the batcher's resolved flag)."""
+        from repro.dist import (DistributedReservoirServer,
+                                ShardedReservoirEngine)
+        p = _params()
+        outs = {}
+        for zc in (False, True):
+            eng = ShardedReservoirEngine(p, n_shards=1, stats=ServeStats())
+            srv = DistributedReservoirServer(
+                eng, slots_per_shard=2, chunk_steps=4, chunk_time=1.0,
+                zero_copy=zc, stats=ServeStats())
+            assert srv.batcher.zero_copy is zc
+            for r in _requests([10, 6, 7], seed=9):
+                srv.submit(r)
+            outs[zc] = srv.run()
+        assert set(outs[True]) == set(outs[False])
+        for uid in outs[True]:
+            assert (outs[True][uid] == outs[False][uid]).all()
+
+    def test_shrink_snapshot_survives_host_input_mutation(self):
+        """Elastic shrink must carry a sequence's remaining inputs from
+        the device-resident lane, not the host buffer — the zero-copy
+        contract frees the caller's array the moment admit() uploads it."""
+        from repro.dist import (DistributedReservoirServer,
+                                ShardedReservoirEngine)
+        p = _params()
+        rng = np.random.default_rng(11)
+        inputs = rng.standard_normal((24, 1)).astype(np.float32)
+
+        def serve(mutate):
+            buf = inputs.copy()
+            eng = ShardedReservoirEngine(p, n_shards=1, stats=ServeStats())
+            srv = DistributedReservoirServer(
+                eng, slots_per_shard=1, chunk_steps=4, chunk_time=1.0,
+                zero_copy=True, stats=ServeStats())
+            srv.submit(RolloutRequest(uid="m", inputs=buf))
+            srv.step()                          # one chunk consumed
+            if mutate:
+                buf[:] = 999.0                  # host buffer is dead
+            srv.shrink(0)                       # snapshot + re-admission
+            return srv.run()["m"]
+
+        clean = serve(mutate=False)
+        mutated = serve(mutate=True)
+        assert (clean == mutated).all()
+
+    def test_deferred_calls_flagged_in_stats(self):
+        p = _params()
+        eng, srv = _server(p, n_slots=2, chunk_steps=4, zero_copy=True)
+        for r in _requests([8, 8], seed=10):
+            srv.submit(r)
+        srv.run()
+        assert eng.stats.deferred_calls == eng.stats.chunks > 0
+        assert "deferred_calls" in eng.stats.summary()
+        # legacy path records fully-synced calls, never flags
+        eng2, srv2 = _server(p, n_slots=2, chunk_steps=4, zero_copy=False)
+        for r in _requests([8, 8], seed=10):
+            srv2.submit(r)
+        srv2.run()
+        assert eng2.stats.deferred_calls == 0
+        assert "deferred_calls" not in eng2.stats.summary()
+
+    def test_device_resident_inputs_single_upload(self):
+        """Admission moves the request's whole input to the device once;
+        run_chunk never touches the host copy again (mutating it after
+        admission must not change the output)."""
+        p = _params()
+        eng = ReservoirEngine(p, stats=ServeStats())
+        from repro.serve.scheduler import QueuedRequest
+        rng = np.random.default_rng(8)
+        inputs = rng.standard_normal((8, 1)).astype(np.float32)
+        ref = eng.predictions(jnp.asarray(inputs)[None])[0]
+        cb = ContinuousBatcher(eng, n_slots=1, chunk_steps=4,
+                               zero_copy=True)
+        q = QueuedRequest(RolloutRequest(uid="z", inputs=inputs))
+        cb.admit(q)
+        inputs[:] = 999.0                       # host buffer is dead now
+        retired, _ = cb.run_chunk()
+        assert not retired
+        (qr, out), = cb.run_chunk()[0]
+        assert qr.uid == "z"
+        assert np.allclose(out, np.asarray(ref))
+
+
+class TestServeStatsZeroDivision:
+    def test_all_timed_out_summary_and_render(self):
+        """Zero requests completed (all expired in the queue): every
+        derived metric must come out 0, not raise ZeroDivisionError."""
+        s = ServeStats()
+        for _ in range(3):
+            s.record_enqueue()
+            s.record_timeout()
+        assert s.admitted == s.completed == s.first_outputs == 0
+        assert s.mean_queue_wait_s == 0.0
+        assert s.mean_ttfp_s == 0.0
+        assert s.steps_per_sec == 0.0
+        assert s.goodput_steps_per_sec == 0.0
+        assert s.padding_efficiency == 1.0
+        assert s.slot_occupancy == 1.0
+        summary = s.summary()
+        assert summary["timed_out"] == 3 and summary["mean_ttfp_ms"] == 0.0
+        assert "3 timed out" in s.render()
+
+    def test_fresh_stats_render(self):
+        s = ServeStats()
+        assert s.summary()["steps_per_sec"] == 0.0
+        assert isinstance(s.render(), str)
+
+    def test_merge_of_empty_and_zero_parts(self):
+        merged = ServeStats.merge([])
+        assert merged.calls == 0 and merged.latency_ewma_s == 0.0
+        assert isinstance(merged.render(), str)
+        merged = ServeStats.merge([ServeStats(), ServeStats()])
+        assert merged.mean_ttfp_s == 0.0 and merged.mean_queue_wait_s == 0.0
+        assert isinstance(merged.summary(), dict)
+
+    def test_all_timed_out_through_real_server(self):
+        p = _params()
+        eng, srv = _server(p, n_slots=1, chunk_steps=4)
+        # one seated request keeps the pool busy while the rest expire
+        srv.submit(RolloutRequest(uid=0, inputs=np.ones((24, 1), np.float32)),
+                   arrival_time=0.0)
+        for i in range(3):
+            srv.submit(RolloutRequest(
+                uid=f"late{i}", inputs=np.ones((8, 1), np.float32)),
+                arrival_time=0.0, deadline=0.5)
+        res = srv.run()
+        assert set(res) == {0}
+        st = srv.stats
+        assert st.timed_out == 3 and st.completed == 1
+        assert st.first_outputs == 1            # honest ttfp denominator
+        assert st.mean_ttfp_s >= 0.0
+        assert isinstance(st.render(), str)
+
+    def test_ttfp_mean_uses_first_outputs_not_admitted(self):
+        s = ServeStats()
+        s.record_admission(1.0)
+        s.record_admission(1.0)                 # two seated...
+        s.record_first_output(4.0)              # ...only one produced output
+        assert s.first_outputs == 1
+        assert s.mean_ttfp_s == 4.0             # not 2.0
