@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core.esn import ESNConfig, fit_readout, init_esn, run_reservoir
 from repro.serve import (AsyncReservoirServer, PaddingBucketer,
-                         ReservoirEngine, RolloutRequest, ServeStats)
+                         ReservoirEngine, ServeStats, SubmitSpec)
 
 
 def main():
@@ -58,9 +58,8 @@ def main():
     engine = ReservoirEngine(params, backend=args.backend, stats=ServeStats())
 
     lengths = rng.integers(8, 97, args.requests)
-    reqs = [RolloutRequest(
-                uid=i,
-                inputs=rng.standard_normal((int(t), 1)).astype(np.float32))
+    reqs = [SubmitSpec(rng.standard_normal((int(t), 1)).astype(np.float32),
+                       uid=i)
             for i, t in enumerate(lengths)]
     total_steps = int(lengths.sum())
 
@@ -69,10 +68,11 @@ def main():
     # (predictions + carried final state at the pool shape).
     warm = jnp.asarray(
         rng.standard_normal((args.slots, args.chunk_steps, 1)), jnp.float32)
-    preds, _ = engine.predictions(warm, return_final_state=True)
+    warm_x0 = jnp.zeros((args.slots, args.dim), jnp.float32)
+    preds, _ = engine.run_segment(warm, warm_x0)
     jax.block_until_ready(preds)                             # compile
     t0 = time.perf_counter()
-    preds, _ = engine.predictions(warm, return_final_state=True)
+    preds, _ = engine.run_segment(warm, warm_x0)
     jax.block_until_ready(preds)
     t_chunk = time.perf_counter() - t0
     service_rate = args.slots * args.chunk_steps / t_chunk
@@ -86,9 +86,9 @@ def main():
     # -- one-shot: the batch exists only after the last arrival ------------
     bucketer = PaddingBucketer(len_buckets=(16, 32, 64, 96),
                                batch_buckets=(1, 2, 4, 8))
-    engine.serve(reqs, bucketer=bucketer)                    # warmup
+    engine.submit_many(reqs, bucketer=bucketer)              # warmup
     t0 = time.perf_counter()
-    res_one = engine.serve(reqs, bucketer=bucketer)
+    res_one = engine.submit_many(reqs, bucketer=bucketer)
     makespan_one = float(arrivals[-1]) + time.perf_counter() - t0
 
     # -- continuous: admit on arrival, chunk, retire, repeat ---------------
@@ -101,7 +101,8 @@ def main():
     makespan_cont = srv.now
 
     for uid, out in res_cont.items():
-        np.testing.assert_allclose(out, np.asarray(res_one[uid]),
+        np.testing.assert_allclose(np.asarray(out.output),
+                                   np.asarray(res_one[uid].output),
                                    rtol=1e-4, atol=1e-6)
     print(f"\nboth paths served {len(res_cont)} requests with matching "
           f"predictions (backend={engine.backend})")

@@ -27,7 +27,7 @@ from repro.core.esn import (ESNConfig, fit_readout, init_esn, predict,
                             run_reservoir)
 from repro.launch.report import plan_table
 from repro.serve import (PaddingBucketer, ReservoirEngine, RolloutRequest,
-                         ServeStats)
+                         ServeStats, SubmitSpec)
 
 
 def main():
@@ -69,7 +69,10 @@ def main():
     bucketer = PaddingBucketer(len_buckets=(16, 32, 64, 128),
                                batch_buckets=(1, 2, 4, 8, 16))
 
-    results = engine.serve(reqs, bucketer=bucketer)     # predictions!
+    results = {uid: r.output for uid, r in
+               engine.submit_many(
+                   [SubmitSpec(q.inputs, uid=q.uid) for q in reqs],
+                   bucketer=bucketer).items()}           # predictions!
     print(f"\nserved {len(results)} rollout requests -> predictions "
           f"(dim={args.dim}, mode={args.mode}, backend={engine.backend})")
     print("serve stats:", engine.stats.render())
@@ -84,10 +87,11 @@ def main():
     assert err < 1e-3, err
     print(f"parity vs scan+predict baseline: max |diff| = {err:.2e}")
 
-    # old contract still one flag away
-    states_dict = engine.serve(reqs[:2], bucketer=bucketer,
-                               return_states=True)
-    assert states_dict[0].shape == (reqs[0].length, args.dim)
+    # same requests, states contract: one SubmitSpec field away
+    specs = [SubmitSpec(r.inputs, uid=r.uid, want_states=True)
+             for r in reqs[:2]]
+    states_res = engine.submit_many(specs, bucketer=bucketer)
+    assert states_res[0].states.shape == (reqs[0].length, args.dim)
 
     # single-shot latency: fused-readout serve vs states-then-matmul
     u = jnp.asarray(rng.standard_normal((8, 64, 1)), jnp.float32)

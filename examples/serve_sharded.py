@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.core.esn import ESNConfig, fit_readout, init_esn, run_reservoir
 from repro.dist import DistributedReservoirServer, ShardedReservoirEngine
-from repro.serve import ReservoirEngine, RolloutRequest, ServeStats
+from repro.serve import ReservoirEngine, ServeStats, SubmitSpec
 
 
 def main():
@@ -70,9 +70,8 @@ def main():
           f"chunk_steps={args.chunk_steps} (virtual clock, 1 tick/chunk)")
 
     lengths = rng.integers(16, 97, args.requests)
-    reqs = [RolloutRequest(
-                uid=i,
-                inputs=rng.standard_normal((int(t), 1)).astype(np.float32))
+    reqs = [SubmitSpec(rng.standard_normal((int(t), 1)).astype(np.float32),
+                       uid=i)
             for i, t in enumerate(lengths)]
     arrivals = np.cumsum(rng.exponential(0.15, args.requests))
     arrivals -= arrivals[0]
@@ -101,7 +100,8 @@ def main():
     single = ReservoirEngine(params, stats=ServeStats())
     for r in reqs:
         want = np.asarray(single.predictions(jnp.asarray(r.inputs)))
-        np.testing.assert_allclose(res[r.uid], want, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(res[r.uid].output), want,
+                                   rtol=1e-4, atol=1e-6)
     print(f"\nall {len(res)}/{args.requests} requests served "
           f"(reshards={srv.reshards}, re-admitted={srv.readmitted}); "
           f"predictions match the single-device engine")

@@ -34,11 +34,11 @@ from repro.serve.stats import ServeStats
 class ShardedReservoirEngine(ReservoirEngine):
     """:class:`ReservoirEngine` with the batch dimension sharded on a mesh.
 
-    Same public API (``rollout`` / ``predictions`` / ``serve`` / the
-    ``return_final_state`` chunk API) and the same compiled per-shard
-    program; the only new behavior is batch padding up to a multiple of
-    the shard count (padded rows are zero sequences riding along in
-    otherwise-idle shard capacity, and never leave the engine).
+    Same public API (``submit`` / ``rollout`` / ``predictions`` / the
+    ``run_segment`` chunk API) and the same compiled per-shard program;
+    the only new behavior is batch padding up to a multiple of the shard
+    count (padded rows are zero sequences riding along in otherwise-idle
+    shard capacity, and never leave the engine).
 
     Pass a ``mesh`` (any mesh with 'data' — and optionally 'pod' — axes)
     or just ``n_shards`` to build a 1-D data mesh over the first N local
@@ -50,7 +50,7 @@ class ShardedReservoirEngine(ReservoirEngine):
                  stats: ServeStats | None = None,
                  dense_dispatch_density: float = DENSE_DISPATCH_DENSITY,
                  vmem_budget: int | None = DEFAULT_VMEM_BUDGET,
-                 specialize: bool = True):
+                 specialize: bool = True, tenant=None):
         self.mesh = mesh if mesh is not None else make_data_mesh(n_shards)
         assert data_axis_names(self.mesh), \
             f"mesh has no data axes: {self.mesh.axis_names}"
@@ -63,8 +63,26 @@ class ShardedReservoirEngine(ReservoirEngine):
         super().__init__(params, backend=backend, interpret=interpret,
                          stats=stats,
                          dense_dispatch_density=dense_dispatch_density,
-                         vmem_budget=vmem_budget, specialize=specialize)
+                         vmem_budget=vmem_budget, specialize=specialize,
+                         tenant=tenant)
         self._sharded_fns: dict = {}
+
+    def like(self, params=None, *, mesh=None, stats=None, tenant=None):
+        """A sibling engine with this one's dispatch policy.
+
+        Elastic rebuilds (new ``mesh``, same params) and multi-tenant
+        routing (new ``params``, same mesh) both need "the same engine,
+        but for X" — mesh-mapped engines are built per server, not
+        through the global ``engine_for`` LRU, because the mesh is part
+        of their identity."""
+        return ShardedReservoirEngine(
+            self.params if params is None else params,
+            mesh=self.mesh if mesh is None else mesh,
+            backend=self.backend, interpret=self.interpret,
+            stats=self.stats if stats is None else stats,
+            dense_dispatch_density=self.dense_dispatch_density,
+            vmem_budget=self.vmem_budget, specialize=self.specialize,
+            tenant=tenant)
 
     def _sharded(self, with_readout: bool, with_final: bool,
                  donate: bool = False):

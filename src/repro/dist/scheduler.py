@@ -19,6 +19,7 @@ bit-identical, so no request is lost and no step is recomputed.
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
 
 import numpy as np
@@ -26,6 +27,7 @@ import numpy as np
 from repro.dist.engine import ShardedReservoirEngine
 from repro.launch.mesh import make_data_mesh
 from repro.runtime.elastic import shrink_serve_plan
+from repro.serve.api import _UNSET, RolloutResult, warn_deprecated
 from repro.serve.batching import RolloutRequest
 from repro.serve.scheduler import AsyncReservoirServer, ContinuousBatcher
 from repro.serve.stats import ServeStats
@@ -35,22 +37,32 @@ class ShardedContinuousBatcher(ContinuousBatcher):
     """Slot pool partitioned into per-shard sub-pools.
 
     ``n_slots = n_shards * slots_per_shard``; the chunk mechanics (state
-    carry, retirement, mid-flight admission) are inherited — the engine
-    call is sharded under the hood, so each shard's sub-pool rolls on its
-    own device.  Per-shard telemetry accumulates in ``shard_stats`` and
-    aggregates through :meth:`ServeStats.merge`.
+    carry, retirement, mid-flight admission, per-model grouping) are
+    inherited — the engine call is sharded under the hood, so each
+    shard's sub-pool rolls on its own device.  Per-shard telemetry
+    accumulates in ``shard_stats`` and aggregates through
+    :meth:`ServeStats.merge`.
     """
 
     def __init__(self, engine: ShardedReservoirEngine, *,
                  slots_per_shard: int = 8, chunk_steps: int = 16,
-                 return_states: bool | None = None,
-                 zero_copy: bool | None = None):
+                 want_states: bool | None = None,
+                 return_states: bool | None = _UNSET,
+                 zero_copy: bool | None = None,
+                 resolver=None):
         assert slots_per_shard >= 1
+        if return_states is not _UNSET:
+            warn_deprecated(
+                "ShardedContinuousBatcher(return_states=...) is "
+                "deprecated; pass want_states=...")
+            if want_states is None:
+                want_states = return_states
         self.n_shards = engine.n_shards
         self.slots_per_shard = slots_per_shard
         super().__init__(engine, n_slots=engine.n_shards * slots_per_shard,
                          chunk_steps=chunk_steps,
-                         return_states=return_states, zero_copy=zero_copy)
+                         want_states=want_states, zero_copy=zero_copy,
+                         resolver=resolver)
         self.shard_stats = [ServeStats() for _ in range(self.n_shards)]
 
     def shard_of(self, slot: int) -> int:
@@ -119,28 +131,52 @@ class DistributedReservoirServer(AsyncReservoirServer):
 
     def __init__(self, engine: ShardedReservoirEngine, *,
                  slots_per_shard: int = 8, chunk_steps: int = 16,
-                 return_states: bool | None = None,
+                 want_states: bool | None = None,
+                 return_states: bool | None = _UNSET,
                  stats: ServeStats | None = None,
                  chunk_time: float | None = None,
-                 zero_copy: bool | None = None):
+                 zero_copy: bool | None = None,
+                 registry=None):
+        if return_states is not _UNSET:
+            warn_deprecated(
+                "DistributedReservoirServer(return_states=...) is "
+                "deprecated; pass want_states=...")
+            if want_states is None:
+                want_states = return_states
         self.engine = engine
         self.slots_per_shard = slots_per_shard
         self.chunk_steps = chunk_steps
-        self.return_states = return_states
+        self.want_states = want_states
         batcher = ShardedContinuousBatcher(
             engine, slots_per_shard=slots_per_shard,
-            chunk_steps=chunk_steps, return_states=return_states,
+            chunk_steps=chunk_steps, want_states=want_states,
             zero_copy=zero_copy)
         super().__init__(engine, stats=stats, chunk_time=chunk_time,
-                         batcher=batcher)
+                         batcher=batcher, registry=registry)
         self.reshards = 0                 # completed shrink operations
         self.readmitted = 0               # in-flight seqs carried across
         self._prefixes: dict = {}         # uid -> chunks produced pre-shrink
         self._shard_epochs: list = []     # pre-shrink batchers' shard stats
+        # mesh-mapped engines are per-server (the mesh is part of their
+        # identity), so tenant routing keeps its own (name, version) map
+        # instead of the global engine_for LRU; shrink() clears it
+        self._model_engines: dict = {}
 
     @property
     def n_shards(self) -> int:
         return self.engine.n_shards
+
+    def _tenant_engine(self, name: str, version: int):
+        """Mesh-mapped engine for a pinned (model, version): built as a
+        sibling of the primary engine (same mesh/dispatch policy, that
+        model's params) and cached per server."""
+        key = (name, version)
+        eng = self._model_engines.get(key)
+        if eng is None:
+            mv = self.registry.get(name, version)
+            eng = self.engine.like(mv.params, tenant=key)
+            self._model_engines[key] = eng
+        return eng
 
     def shard_summary(self) -> ServeStats:
         """All per-shard telemetry merged into one ``ServeStats`` (the
@@ -164,8 +200,17 @@ class DistributedReservoirServer(AsyncReservoirServer):
         if self._prefixes:
             for uid in [u for u in self._prefixes if u in self.results]:
                 prefix = self._prefixes.pop(uid)
-                self.results[uid] = np.concatenate(
-                    prefix + [self.results[uid]], axis=0)
+                res = self.results[uid]
+                if isinstance(res, RolloutResult):
+                    full = np.concatenate(
+                        prefix + [np.asarray(res.output)], axis=0)
+                    self.results[uid] = dataclasses.replace(
+                        res,
+                        preds=None if res.preds is None else full,
+                        states=None if res.states is None else full)
+                else:
+                    self.results[uid] = np.concatenate(
+                        prefix + [res], axis=0)
         return alive
 
     # -- elastic -------------------------------------------------------------
@@ -185,20 +230,19 @@ class DistributedReservoirServer(AsyncReservoirServer):
         new_n = max(plan["usable_devices"], 1)
         carried = self.batcher.snapshot_live()
 
-        engine = ShardedReservoirEngine(
-            self.engine.params,
+        engine = self.engine.like(
             mesh=make_data_mesh(devices=self.engine.mesh.devices.ravel()
-                                [:new_n].tolist()),
-            backend=self.engine.backend, interpret=self.engine.interpret,
-            stats=self.engine.stats, vmem_budget=self.engine.vmem_budget,
-            dense_dispatch_density=self.engine.dense_dispatch_density,
-            specialize=self.engine.specialize)
+                                [:new_n].tolist()))
         self.engine = engine
         self._shard_epochs.append(self.batcher.shard_stats)
         self.batcher = ShardedContinuousBatcher(
             engine, slots_per_shard=self.slots_per_shard,
-            chunk_steps=self.chunk_steps, return_states=self.return_states,
-            zero_copy=self.batcher.zero_copy)
+            chunk_steps=self.chunk_steps, want_states=self.want_states,
+            zero_copy=self.batcher.zero_copy,
+            resolver=self._resolve_engine)
+        # tenant engines were mapped on the lost mesh — rebuild lazily on
+        # the survivors' mesh as pinned requests re-resolve
+        self._model_engines.clear()
 
         for qreq, remaining, state, chunks in carried:
             if chunks:

@@ -70,15 +70,15 @@ class FusedRollout:
         return self.layout.n_bands
 
     def __call__(self, u_seq: jnp.ndarray, x0: jnp.ndarray | None = None, *,
-                 return_states: bool = True, return_preds: bool = False,
-                 return_final: bool = False):
+                 want_states: bool = True, want_preds: bool = False,
+                 want_final: bool = False):
         """u_seq: (T, B, I) -> the requested outputs, in order: states
         (T, B, dim), preds (T // readout_every, B, out_dim), final state
         (B, dim).  A bare array when exactly one is requested, else a
-        tuple.  ``return_final`` hands back x(T) so a later chunk can
+        tuple.  ``want_final`` hands back x(T) so a later chunk can
         resume the rollout bit-identically (continuous batching)."""
-        assert return_states or return_preds or return_final
-        assert not return_preds or self.w_out is not None, \
+        assert want_states or want_preds or want_final
+        assert not want_preds or self.w_out is not None, \
             "fused readout requested but no w_out attached"
         t, b, _ = u_seq.shape
         if x0 is None:
@@ -88,18 +88,18 @@ class FusedRollout:
             x0 = jnp.pad(x0, ((0, 0), (0, self.rpad - x0.shape[1])))
         out = reservoir_rollout(
             u_seq.astype(jnp.float32), self.layout.data, self.w_in, x0,
-            self.w_out if return_preds else None,
+            self.w_out if want_preds else None,
             band_plans=self.layout.band_plans(), leak=self.leak,
             block=self.block, mode=self.mode, smax=self.smax,
             recur_scale=self.recur_scale, readout_every=self.readout_every,
-            want_states=return_states, want_preds=return_preds,
-            want_final=return_final, interpret=self.interpret)
+            want_states=want_states, want_preds=want_preds,
+            want_final=want_final, interpret=self.interpret)
         parts = list(out) if isinstance(out, tuple) else [out]
         trimmed = []
-        if return_states:
+        if want_states:
             trimmed.append(parts.pop(0)[:, :, : self.dim])
-        if return_preds:
+        if want_preds:
             trimmed.append(parts.pop(0)[:, :, : self.out_dim])
-        if return_final:
+        if want_final:
             trimmed.append(parts.pop(0)[:, : self.dim])
         return trimmed[0] if len(trimmed) == 1 else tuple(trimmed)

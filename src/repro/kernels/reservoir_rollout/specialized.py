@@ -327,13 +327,13 @@ class SpecializedRollout:
         if fn is None:
             program, me = self.program, self
 
-            def launch(u_seq, x0, *, return_states, return_preds,
-                       return_final, b_tile):
+            def launch(u_seq, x0, *, want_states, want_preds,
+                       want_final, b_tile):
                 # trace-time side effect: one tick per compiled program
                 # (donate is part of the key — a donated variant is a
                 # distinct program, not a recompile)
-                me.trace_counts[(u_seq.shape, return_states, return_preds,
-                                 return_final, donate,
+                me.trace_counts[(u_seq.shape, want_states, want_preds,
+                                 want_final, donate,
                                  program.regime)] += 1
                 # batch/lane padding AND output trimming live inside the
                 # jit: the caller's (B, dim) carried-state buffer is the
@@ -349,46 +349,46 @@ class SpecializedRollout:
                     u_seq = jnp.pad(u_seq, ((0, 0), (0, b_pad - b), (0, 0)))
                 out = specialized_rollout(
                     u_seq.astype(jnp.float32), program.data, me.w_in, x0,
-                    me.w_out if return_preds else None,
+                    me.w_out if want_preds else None,
                     schedules=program.schedules, leak=me.leak,
                     block=me.block, mode=me.mode, smax=me.smax,
                     recur_scale=me.recur_scale, b_tile=b_tile,
                     readout_every=me.readout_every,
-                    want_states=return_states, want_preds=return_preds,
-                    want_final=return_final, interpret=me.interpret)
+                    want_states=want_states, want_preds=want_preds,
+                    want_final=want_final, interpret=me.interpret)
                 parts = list(out) if isinstance(out, tuple) else [out]
                 trimmed = []
-                if return_states:
+                if want_states:
                     trimmed.append(parts.pop(0)[:, :b, : me.dim])
-                if return_preds:
+                if want_preds:
                     trimmed.append(parts.pop(0)[:, :b, : me.out_dim])
-                if return_final:
+                if want_final:
                     trimmed.append(parts.pop(0)[:b, : me.dim])
                 return trimmed[0] if len(trimmed) == 1 else tuple(trimmed)
 
             fn = jax.jit(
                 launch,
-                static_argnames=("return_states", "return_preds",
-                                 "return_final", "b_tile"),
+                static_argnames=("want_states", "want_preds",
+                                 "want_final", "b_tile"),
                 donate_argnums=(1,) if donate else ())
             self._fns[donate] = fn
         return fn
 
     def __call__(self, u_seq: jnp.ndarray, x0: jnp.ndarray | None = None, *,
-                 return_states: bool = True, return_preds: bool = False,
-                 return_final: bool = False, donate_state: bool = False):
+                 want_states: bool = True, want_preds: bool = False,
+                 want_final: bool = False, donate_state: bool = False):
         """u_seq: (T, B, I) -> the requested outputs (states, preds, final
         state), exactly as :class:`..ops.FusedRollout`.  ``donate_state``
         donates ``x0`` to the launch so the emitted final state can reuse
         its buffer (the chunked scheduler's carried slot states)."""
-        assert return_states or return_preds or return_final
-        assert not return_preds or self.w_out is not None, \
+        assert want_states or want_preds or want_final
+        assert not want_preds or self.w_out is not None, \
             "fused readout requested but no w_out attached"
         _t, b, _ = u_seq.shape
         b_tile, _n_tiles, _b_pad = self.program.batch_tiling(b)
         if x0 is None:
             x0 = jnp.zeros((b, self.dim), jnp.float32)
         return self._fn(donate_state)(
-            u_seq, jnp.asarray(x0), return_states=return_states,
-            return_preds=return_preds, return_final=return_final,
+            u_seq, jnp.asarray(x0), want_states=want_states,
+            want_preds=want_preds, want_final=want_final,
             b_tile=b_tile)

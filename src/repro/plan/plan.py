@@ -464,30 +464,43 @@ class ExecutionPlan:
 # a long-lived multi-tenant server to worry about.  The counters let such
 # a server verify that property (and spot a caller accidentally
 # re-compiling matrices instead of reusing them).
-_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+_PLAN_CACHE_STATS: dict = {"hits": 0, "misses": 0, "tenants": {}}
 
 
 def plan_cache_stats(reset: bool = False) -> dict:
-    """Cumulative plan_for hit/miss counters (``reset=True`` zeroes them)."""
+    """Cumulative plan_for hit/miss counters (``reset=True`` zeroes them).
+
+    ``tenants`` breaks the counters down by the registry model name passed
+    through ``plan_for(..., tenant=...)`` — a multi-tenant server can
+    verify per model that republishing reuses cached lowerings instead of
+    re-planning."""
     out = dict(_PLAN_CACHE_STATS)
+    out["tenants"] = {name: dict(c)
+                     for name, c in _PLAN_CACHE_STATS["tenants"].items()}
     if reset:
         _PLAN_CACHE_STATS.update(hits=0, misses=0)
+        _PLAN_CACHE_STATS["tenants"].clear()
     return out
 
 
-def plan_for(fm: FixedMatrix) -> ExecutionPlan:
+def plan_for(fm: FixedMatrix, tenant: str | None = None) -> ExecutionPlan:
     """The ExecutionPlan for a compiled matrix, cached per instance.
 
     FixedMatrix is frozen by construction, so the plan — like the paper's
     place-and-route result — is computed at most once per matrix, and it
     is released exactly when the matrix is: the cache slot lives on the
-    instance, never in a process-global table.
+    instance, never in a process-global table.  ``tenant`` (a registry
+    model name) attributes the hit/miss to that tenant's counters in
+    :func:`plan_cache_stats`.
     """
     plan = getattr(fm, "_execution_plan", None)
-    if plan is None or plan._fm is not fm:
+    hit = plan is not None and plan._fm is fm
+    if not hit:
         plan = ExecutionPlan(fm)
         fm._execution_plan = plan
-        _PLAN_CACHE_STATS["misses"] += 1
-    else:
-        _PLAN_CACHE_STATS["hits"] += 1
+    _PLAN_CACHE_STATS["hits" if hit else "misses"] += 1
+    if tenant is not None:
+        tenants = _PLAN_CACHE_STATS["tenants"]
+        c = tenants.setdefault(tenant, {"hits": 0, "misses": 0})
+        c["hits" if hit else "misses"] += 1
     return plan

@@ -16,7 +16,7 @@ from typing import Callable, Optional
 import numpy as np
 
 __all__ = ["plan_mesh", "replan_after_failure", "shrink_serve_plan",
-           "StragglerWatchdog", "Heartbeats"]
+           "swap_serve_plan", "StragglerWatchdog", "Heartbeats"]
 
 
 def plan_mesh(n_devices: int, model_parallel: int,
@@ -87,6 +87,38 @@ def shrink_serve_plan(n_shards: int, failed: int) -> dict:
         "resume: queued requests were never lost, they stay in the FIFO",
     ]
     return base
+
+
+def swap_serve_plan(name: str, old_version: int | None,
+                    new_version: int) -> dict:
+    """Live-swap response for a multi-tenant serving pool.
+
+    Publishing a new version of a served model is the zero-downtime
+    analogue of :func:`shrink_serve_plan`: nothing about the mesh changes,
+    but the engine behind a tenant's admissions does, and the state that
+    must survive is again the in-flight work.  The action list is the
+    contract ``ModelRegistry.publish`` executes — compile *before*
+    cutover, pin in-flight slots to the engine they started on, and make
+    the cutover a single atomic active-version write so no request ever
+    observes a half-swapped model.
+    """
+    return {
+        "model": name,
+        "previous_version": old_version,
+        "version": new_version,
+        "actions": [
+            "build the new version's engine off-path (plan -> specialize "
+            "-> compile; ExecutionPlan cached per registry identity)",
+            "prewarm it against every attached server's pool shapes "
+            "(chunk program compiled before any request routes to it)",
+            "atomic cutover: flip the registry's active version — new "
+            "admissions pin the new engine",
+            "in-flight slots keep their admission-pinned engine and run "
+            "to completion (zero drops, bit-exact both sides)",
+            "demote the retired version in the engine LRU so it is first "
+            "out once its last pinned slot retires",
+        ],
+    }
 
 
 @dataclasses.dataclass

@@ -1,21 +1,30 @@
 """Serving layer: fused batched reservoir rollouts behind request batching.
 
+- ``api``       — SubmitSpec / RolloutResult, the one request/response
+  contract shared by every entry point
 - ``engine``    — ReservoirEngine: fused rollout (xla scan / pallas kernel)
 - ``batching``  — padding-bucket request batching
 - ``scheduler`` — continuous batching: slot pool + time-stamped queue,
-  chunked rollouts with per-slot reservoir-state carry
+  chunked rollouts with per-slot reservoir-state carry (multi-tenant:
+  slots pin engines, chunks group by model)
+- ``registry``  — named/versioned models with bit-exact live swap
 - ``stats``     — throughput / latency / padding / queue telemetry
 """
 
+from repro.serve.api import RolloutResult, SubmitSpec  # noqa: F401
 from repro.serve.batching import (MicroBatch, PaddingBucketer,  # noqa: F401
                                   RolloutRequest)
 from repro.serve.engine import (ReservoirEngine, engine_cache_clear,  # noqa: F401,E501
-                                engine_cache_stats, engine_for)
+                                engine_cache_demote, engine_cache_stats,
+                                engine_for)
+from repro.serve.registry import (ModelRegistry, ModelVersion,  # noqa: F401
+                                  TenantPolicy)
 from repro.serve.scheduler import (AsyncReservoirServer,  # noqa: F401
                                    ContinuousBatcher, QueuedRequest)
 from repro.serve.stats import ServeStats  # noqa: F401
 
-__all__ = ["ReservoirEngine", "engine_for", "engine_cache_clear",
-           "engine_cache_stats", "ServeStats", "PaddingBucketer",
-           "RolloutRequest", "MicroBatch", "AsyncReservoirServer",
-           "ContinuousBatcher", "QueuedRequest"]
+__all__ = ["SubmitSpec", "RolloutResult", "ReservoirEngine", "engine_for",
+           "engine_cache_clear", "engine_cache_demote", "engine_cache_stats",
+           "ServeStats", "PaddingBucketer", "RolloutRequest", "MicroBatch",
+           "AsyncReservoirServer", "ContinuousBatcher", "QueuedRequest",
+           "ModelRegistry", "ModelVersion", "TenantPolicy"]

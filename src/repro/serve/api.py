@@ -1,0 +1,113 @@
+"""The one serve request/response contract.
+
+Three entry points grew three slightly different surfaces: the engine's
+``rollout``/``predictions`` boolean twins (``return_final_state=True``
+changes the return arity), ``serve(..., return_states=True)``, and the
+scheduler's ``submit(request, arrival_time, deadline)``.  This module
+collapses them: every caller builds a :class:`SubmitSpec`, every path
+answers with a :class:`RolloutResult`, and the booleans become one
+``want_states`` field.  :class:`~repro.serve.engine.ReservoirEngine`,
+:class:`~repro.serve.scheduler.AsyncReservoirServer` and
+:class:`~repro.dist.scheduler.DistributedReservoirServer` accept the spec
+identically; the old kwargs survive one release as warning shims.
+
+The module is dependency-free on purpose (no jax, no engine imports) so
+every serve module can import it without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+
+class _Unset:
+    """Sentinel distinguishing "kwarg not passed" from an explicit value
+    on the deprecated-kwarg shims (``None``/``False`` are legal values)."""
+
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return "<unset>"
+
+    def __bool__(self) -> bool:
+        return False
+
+
+_UNSET = _Unset()
+
+
+def warn_deprecated(message: str, *, stacklevel: int = 3) -> None:
+    """One-liner for the shim paths; always points past the shim frame."""
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+@dataclasses.dataclass(frozen=True)
+class SubmitSpec:
+    """One serving request, identical across every entry point.
+
+    ``inputs`` is the (T, input_dim) step sequence (engines also accept a
+    pre-batched (B, T, input_dim) array on the one-shot path).  Everything
+    else is keyword-only:
+
+    * ``model``        — registry model name to route to (multi-tenant
+      servers resolve it through their :class:`ModelRegistry`; the bare
+      single-model engine rejects it).
+    * ``x0``           — optional (reservoir_dim,) initial state.
+    * ``deadline``     — absolute time on the server's clock; a spec still
+      queued past it is dropped (``timed_out``).  ``None`` falls back to
+      the model's registry deadline policy, if any.
+    * ``want_states``  — ``True``: answer with the (T, R) state
+      trajectory; ``False``: answer with (T, O) predictions; ``None``
+      (default): predictions when the serving engine has a trained
+      readout, states otherwise.
+    * ``uid``          — result key; servers assign ``req<N>`` when None.
+    """
+
+    inputs: Any
+    _: dataclasses.KW_ONLY
+    model: str | None = None
+    x0: Any | None = None
+    deadline: float | None = None
+    want_states: bool | None = None
+    uid: Any | None = None
+
+    @property
+    def length(self) -> int:
+        return int(self.inputs.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class RolloutResult:
+    """What every serve path answers with.
+
+    Exactly one of ``preds``/``states`` is set (by ``want_states``);
+    ``output`` is the one that is.  ``final_state`` is x(T) on the
+    one-shot engine paths (the carry a chunked caller resumes from
+    bit-identically); scheduler paths answer ``None`` — a pooled chunk
+    rolls past a retiring sequence's real length, so the pool row is not
+    x(T).  ``timings`` is a plain mutable dict: engines record
+    ``seconds``; servers record the request lifecycle (``arrival_time``,
+    ``admit_time``, ``finish_time``, ``queue_wait_s``, ``ttfp_s``,
+    ``latency_s``) plus ``model``/``version`` when routed by a registry.
+    """
+
+    preds: Any | None = None
+    states: Any | None = None
+    final_state: Any | None = None
+    timings: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def output(self) -> Any:
+        """The requested payload: predictions, or states under
+        ``want_states=True``."""
+        return self.states if self.preds is None else self.preds
+
+
+__all__ = ["SubmitSpec", "RolloutResult", "warn_deprecated", "_UNSET"]

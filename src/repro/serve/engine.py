@@ -19,8 +19,11 @@ compile-to-bitstream step) and fronts two fused implementations:
 With a trained readout the engine serves *predictions*: ``W_out`` is fused
 into the rollout epilogue (per-step ``y = x @ W_out`` inside the scan body
 / Pallas launch), so the state trajectory is never materialized on the
-prediction path.  ``serve(..., return_states=True)`` keeps the old
-states contract.
+prediction path.  The request/response surface is the unified
+:class:`~repro.serve.api.SubmitSpec` -> :class:`~repro.serve.api.RolloutResult`
+contract (``submit`` / ``submit_many``); ``want_states=True`` on the spec
+keeps the states contract, and the chunked schedulers drive
+:meth:`ReservoirEngine.run_segment` directly.
 """
 
 from __future__ import annotations
@@ -32,12 +35,14 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.esn import ESNParams
 from repro.kernels.reservoir_rollout.ops import FusedRollout
 from repro.kernels.reservoir_rollout.specialized import SpecializedRollout
 from repro.plan import DEFAULT_VMEM_BUDGET, plan_for, specialize_rollout
 from repro.plan.specialize import int8_recur_reference
+from repro.serve.api import _UNSET, RolloutResult, SubmitSpec, warn_deprecated
 from repro.serve.batching import MicroBatch, PaddingBucketer, RolloutRequest
 from repro.serve.stats import ServeStats
 
@@ -70,13 +75,16 @@ class ReservoirEngine:
                  interpret: bool = True, stats: ServeStats | None = None,
                  dense_dispatch_density: float = DENSE_DISPATCH_DENSITY,
                  vmem_budget: int | None = DEFAULT_VMEM_BUDGET,
-                 specialize: bool = True):
+                 specialize: bool = True, tenant: str | None = None):
         assert backend in ("auto", "xla", "pallas"), backend
         self.params = params
         self.config = params.config
         self.backend = "xla" if backend == "auto" else backend
         self.stats = stats if stats is not None else ServeStats()
-        self.plan = plan_for(params.w)
+        # registry model name this engine serves (None outside a
+        # registry); threads through to the plan-cache tenant counters
+        self.tenant = tenant
+        self.plan = plan_for(params.w, tenant=tenant)
         self.vmem_budget = vmem_budget
         self.specialize = specialize
         self._int8 = self.config.mode.startswith("int8")
@@ -241,9 +249,9 @@ class ReservoirEngine:
 
             def fn(u_bt, x0):
                 out = fused(jnp.swapaxes(u_bt, 0, 1), x0,
-                            return_states=not with_readout,
-                            return_preds=with_readout,
-                            return_final=with_final, **kw)
+                            want_states=not with_readout,
+                            want_preds=with_readout,
+                            want_final=with_final, **kw)
                 y, xf = out if with_final else (out, None)
                 y = jnp.swapaxes(y, 0, 1)
                 return (y, xf) if with_final else y
@@ -297,106 +305,248 @@ class ReservoirEngine:
                                    real_steps=real_steps, deferred=defer)
         return out
 
+    def _resolve_want(self, want_states: bool | None) -> bool:
+        want = (not self.has_readout) if want_states is None \
+            else bool(want_states)
+        if not want and self._w_out is None:
+            raise ValueError("readout not trained; call fit_readout first "
+                             "(or submit with want_states=True)")
+        return want
+
+    def run_segment(self, inputs, x0, *, want_states: bool = False,
+                    real_steps: int | None = None,
+                    donate_state: bool = False,
+                    defer_sync: bool = False):
+        """The chunk-serving primitive: ``(B, T, I), (B, R) -> (out, x_end)``.
+
+        One fused rollout of a batch segment from the carried states,
+        ALWAYS returning the post-segment states — the carry the next
+        segment resumes from bit-identically.  ``donate_state=True``
+        donates the ``x0`` buffer to the launch (the caller must not reuse
+        it; the chunked scheduler owns its carry) and ``defer_sync=True``
+        skips the per-call host sync so the serve loop only waits for the
+        device at slot retirement.  Strictly batched: no 2D single-sequence
+        convenience — that is :meth:`submit`'s job.
+        """
+        if not want_states and self._w_out is None:
+            raise ValueError("readout not trained; call fit_readout first "
+                             "(or run the segment with want_states=True)")
+        u = jnp.asarray(inputs)
+        x0b = jnp.asarray(x0, jnp.float32)
+        b, t = u.shape[0], u.shape[1]
+        t0 = time.perf_counter()
+        out, xf = self._dispatch(u, x0b, not want_states, True, donate_state)
+        self._record(out, b, t, t0, real_steps, defer=defer_sync)
+        return out, xf
+
+    def submit(self, spec: SubmitSpec) -> RolloutResult:
+        """One-shot serve of a single :class:`SubmitSpec`.
+
+        ``inputs`` may be (T, I) or pre-batched (B, T, I); the result's
+        ``preds``/``states``/``final_state`` match that leading shape.
+        ``final_state`` is exactly x(T) — the chunk-resume carry.
+        ``spec.deadline`` is ignored here (no queue to wait in); routed
+        ``spec.model`` requests belong on a registry-backed server or
+        :meth:`ModelRegistry.submit`.
+        """
+        if spec.model is not None:
+            raise ValueError(
+                f"spec routes to model {spec.model!r} but this is a bare "
+                "single-model engine; submit through a registry-backed "
+                "server (or ModelRegistry.submit)")
+        want = self._resolve_want(spec.want_states)
+        u, x0b, single = self._prepare(spec.inputs, spec.x0)
+        b, t, _ = u.shape
+        t0 = time.perf_counter()
+        out, xf = self._dispatch(u, x0b, not want, True, False)
+        self._record(out, b, t, t0, None)
+        seconds = time.perf_counter() - t0
+        if single:
+            out, xf = out[0], xf[0]
+        return RolloutResult(preds=None if want else out,
+                             states=out if want else None,
+                             final_state=xf, timings={"seconds": seconds})
+
+    def submit_many(self, specs: Sequence[SubmitSpec],
+                    bucketer: PaddingBucketer | None = None) -> dict:
+        """Batch, pad and roll a set of variable-length specs.
+
+        Returns ``{uid: RolloutResult}`` (specs without a ``uid`` get
+        ``req<position>``).  Specs sharing a resolved ``want_states`` ride
+        the same padded microbatches; padding overhead lands in
+        ``self.stats``.  ``final_state`` is ``None`` on this path: the
+        padded batch rolls past each request's real length, so the
+        microbatch carry is not any request's x(T) — use :meth:`submit`
+        when the resume carry matters.  A spec's ``x0`` seeds its row of
+        the padded batch (rows without one start from zero).
+        """
+        bucketer = bucketer or PaddingBucketer()
+        groups: dict[bool, list] = {}
+        for i, spec in enumerate(specs):
+            if spec.model is not None:
+                raise ValueError(
+                    f"spec routes to model {spec.model!r}; submit through "
+                    "a registry-backed server")
+            want = self._resolve_want(spec.want_states)
+            uid = spec.uid if spec.uid is not None else f"req{i}"
+            groups.setdefault(want, []).append(
+                RolloutRequest(uid=uid, inputs=np.asarray(spec.inputs),
+                               x0=spec.x0))
+        results: dict = {}
+        dim = self.config.reservoir_dim
+        for want, reqs in groups.items():
+            for mb in bucketer.group(reqs):
+                u = jnp.asarray(mb.inputs)
+                b, t = u.shape[0], u.shape[1]
+                x0b = (jnp.zeros((b, dim), jnp.float32) if mb.x0 is None
+                       else jnp.asarray(mb.x0, jnp.float32))
+                t0 = time.perf_counter()
+                out, _xf = self._dispatch(u, x0b, not want, True, False)
+                self._record(out, b, t, t0, mb.real_steps)
+                seconds = time.perf_counter() - t0
+                for j, req in enumerate(mb.requests):
+                    row = out[j, :req.length]
+                    results[req.uid] = RolloutResult(
+                        preds=None if want else row,
+                        states=row if want else None,
+                        timings={"seconds": seconds})
+        return results
+
+    # -- deprecated boolean-twin shims (one release) -------------------------
     def rollout(self, inputs: jnp.ndarray,
                 x0: jnp.ndarray | None = None,
                 real_steps: int | None = None,
-                return_final_state: bool = False, *,
+                return_final_state: bool = _UNSET, *,
                 donate_state: bool = False,
                 defer_sync: bool = False):
         """Roll the reservoir: (T, I) -> (T, R) or (B, T, I) -> (B, T, R).
 
-        With ``return_final_state=True`` also returns x(T) — (R,) / (B, R)
-        — the carry a later chunked call resumes from bit-identically.
-        ``donate_state=True`` donates the ``x0`` buffer to the launch (the
-        caller must not reuse it; the chunked scheduler owns its carry) and
-        ``defer_sync=True`` skips the per-call host sync so the serve loop
-        only waits for the device at retirement.
+        Passing the deprecated boolean twin (``True`` changes the return
+        arity to ``(states, x(T))``) warns: chunked callers belong on
+        :meth:`run_segment`, one-shot callers needing the carry on
+        :meth:`submit` (``RolloutResult.final_state``).
         """
+        with_final = False
+        if return_final_state is not _UNSET:
+            warn_deprecated(
+                "rollout(return_final_state=...) is deprecated: use "
+                "run_segment() for chunked serving or "
+                "submit(SubmitSpec(...)).final_state for the one-shot "
+                "carry")
+            with_final = bool(return_final_state)
         u, x0b, single = self._prepare(inputs, x0)
         b, t, _ = u.shape
         t0 = time.perf_counter()
-        states, xf = self._dispatch(u, x0b, False, return_final_state,
-                                    donate_state and return_final_state)
+        states, xf = self._dispatch(u, x0b, False, with_final,
+                                    donate_state and with_final)
         self._record(states, b, t, t0, real_steps, defer=defer_sync)
-        if return_final_state:
+        if with_final:
             return (states[0], xf[0]) if single else (states, xf)
         return states[0] if single else states
 
     def predictions(self, inputs: jnp.ndarray,
                     x0: jnp.ndarray | None = None,
                     real_steps: int | None = None,
-                    return_final_state: bool = False, *,
+                    return_final_state: bool = _UNSET, *,
                     donate_state: bool = False,
                     defer_sync: bool = False):
         """Fused-readout rollout: (B, T, I) -> (B, T, O) predictions.
 
         ``W_out`` is applied inside the rollout (scan body / Pallas
         epilogue), so the (B, T, R) state trajectory is never materialized.
-        ``return_final_state=True`` additionally returns x(T), letting the
-        continuous scheduler serve predictions chunk by chunk while
-        carrying reservoir state between chunks.  ``donate_state`` /
-        ``defer_sync`` are the zero-copy chunk-serving knobs (see
-        :meth:`rollout`).
+        The deprecated ``return_final_state`` twin warns exactly like
+        :meth:`rollout`'s.
         """
         if self._w_out is None:
             raise ValueError("readout not trained; call fit_readout first "
-                             "(or serve with return_states=True)")
+                             "(or submit with want_states=True)")
+        with_final = False
+        if return_final_state is not _UNSET:
+            warn_deprecated(
+                "predictions(return_final_state=...) is deprecated: use "
+                "run_segment() for chunked serving or "
+                "submit(SubmitSpec(...)).final_state for the one-shot "
+                "carry")
+            with_final = bool(return_final_state)
         u, x0b, single = self._prepare(inputs, x0)
         b, t, _ = u.shape
         t0 = time.perf_counter()
-        preds, xf = self._dispatch(u, x0b, True, return_final_state,
-                                   donate_state and return_final_state)
+        preds, xf = self._dispatch(u, x0b, True, with_final,
+                                   donate_state and with_final)
         self._record(preds, b, t, t0, real_steps, defer=defer_sync)
-        if return_final_state:
+        if with_final:
             return (preds[0], xf[0]) if single else (preds, xf)
         return preds[0] if single else preds
 
     def serve(self, requests: Sequence[RolloutRequest],
               bucketer: PaddingBucketer | None = None,
-              return_states: bool | None = None) -> dict:
-        """Batch, pad and roll a set of variable-length requests.
+              return_states: bool | None = _UNSET) -> dict:
+        """Deprecated-surface batch serve: {uid: bare ndarray}.
 
-        With a trained readout (the default once ``fit_readout`` ran) this
-        returns predictions — {uid: (T_request, O)} — via the fused readout
-        epilogue.  ``return_states=True`` preserves the old contract and
-        returns {uid: (T_request, R)} states; it is also the fallback when
-        no readout is attached.  Padding overhead lands in ``self.stats``.
-
-        Requests carrying an ``x0`` seed their slot of the batch with that
-        initial state (rows without one start from zero).
+        :meth:`submit_many` is the current contract (same batching, but
+        answering ``RolloutResult``); this shim survives one release for
+        callers holding ``RolloutRequest`` lists.  Without a trained
+        readout it falls back to states; the deprecated ``return_states``
+        twin forces the states contract with a warning.
         """
+        if return_states is _UNSET:
+            return_states = None
+        else:
+            warn_deprecated(
+                "serve(return_states=...) is deprecated: use "
+                "submit_many([SubmitSpec(..., want_states=True)]) — "
+                "results carry .states/.preds explicitly")
         if return_states is None:
             return_states = not self.has_readout
-        fn = self.rollout if return_states else self.predictions
-        bucketer = bucketer or PaddingBucketer()
-        results = {}
-        for mb in bucketer.group(list(requests)):
-            out = fn(jnp.asarray(mb.inputs), x0=mb.x0,
-                     real_steps=mb.real_steps)
-            for j, req in enumerate(mb.requests):
-                results[req.uid] = out[j, :req.length]
-        return results
+        specs = [SubmitSpec(req.inputs, x0=req.x0, uid=req.uid,
+                            want_states=return_states)
+                 for req in requests]
+        return {uid: res.output
+                for uid, res in self.submit_many(specs, bucketer).items()}
 
 
 # -- bounded engine cache ----------------------------------------------------
 # A long-lived multi-tenant server cycles through many reservoirs; an
 # unbounded per-process cache of compiled engines would grow without limit.
-# The cache is a module-level LRU keyed by (id(params), backend).  A cached
-# engine holds its params alive, so a live entry's id can never be reused
-# by a different object; after eviction an id *can* recur, which the
-# identity staleness check below catches before serving a wrong engine.
+# The cache is a module-level LRU with two key regimes:
+#
+# * registry identity ``((name, version), backend)`` — the multi-tenant
+#   contract.  (name, version) is stable across process lifetime, so a
+#   republished readout with value-equal arrays can NEVER alias the old
+#   version's compiled engine: the version number differs, and the entry's
+#   staleness check still guards params/readout identity on top.
+# * legacy ``(id(params), backend)`` — the single-model accessor
+#   (run_reservoir etc.).  A cached engine holds its params alive, so a
+#   live entry's id can never be reused by a different object; after
+#   eviction an id *can* recur, which the identity staleness check
+#   catches before serving a wrong engine.
+#
+# Entries are (engine, kwargs-signature) tuples; per-tenant hit/miss
+# counters land under ``engine_cache_stats()["tenants"]``.
 ENGINE_CACHE_MAX = 32
 _engine_cache: "collections.OrderedDict[tuple, tuple]" = \
     collections.OrderedDict()
-_engine_cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
+_engine_cache_stats: dict = {"hits": 0, "misses": 0, "evictions": 0,
+                             "tenants": {}}
+
+
+def _tenant_counters(name) -> dict:
+    tenants = _engine_cache_stats["tenants"]
+    d = tenants.get(name)
+    if d is None:
+        d = tenants[name] = {"hits": 0, "misses": 0}
+    return d
 
 
 def engine_cache_stats(reset: bool = False) -> dict:
     """Hit/miss/eviction counters of the ``engine_for`` LRU (plus current
-    size); ``reset=True`` zeroes the counters."""
+    size and the per-tenant breakdown); ``reset=True`` zeroes them."""
     out = dict(_engine_cache_stats, size=len(_engine_cache))
+    out["tenants"] = {name: dict(c)
+                      for name, c in _engine_cache_stats["tenants"].items()}
     if reset:
         _engine_cache_stats.update(hits=0, misses=0, evictions=0)
+        _engine_cache_stats["tenants"].clear()
     return out
 
 
@@ -404,48 +554,105 @@ def engine_cache_clear() -> None:
     _engine_cache.clear()
 
 
-def engine_for(params: ESNParams, backend: str = "auto",
-               **kwargs) -> ReservoirEngine:
+def engine_cache_demote(tenant) -> int:
+    """Move every cache entry of ``tenant`` — a registry ``(name,
+    version)`` — to the eviction front of the LRU, so a just-retired model
+    version is the first thing churn reclaims.  Returns the number of
+    entries demoted (the engine stays usable until actually evicted:
+    in-flight slots pinned to it finish unaffected)."""
+    demoted = 0
+    for key in list(_engine_cache):
+        if key[0] == tenant:
+            _engine_cache.move_to_end(key, last=False)
+            demoted += 1
+    return demoted
+
+
+def _cache_put(key: tuple, eng: "ReservoirEngine", sig: tuple) -> None:
+    _engine_cache[key] = (eng, sig)
+    _engine_cache.move_to_end(key)
+    while len(_engine_cache) > ENGINE_CACHE_MAX:
+        _engine_cache.popitem(last=False)
+        _engine_cache_stats["evictions"] += 1
+    _engine_cache_stats["misses"] += 1
+
+
+def _params_stale(eng: "ReservoirEngine", params: ESNParams) -> bool:
+    cfg = params.config
+    return (eng.params is not params
+            or eng._w_out is not params.w_out
+            or eng.params.w is not params.w
+            or (eng.config.leak, eng.config.mode, eng.config.state_bits)
+            != (cfg.leak, cfg.mode, cfg.state_bits))
+
+
+def engine_for(params: ESNParams, backend: str = "auto", *,
+               tenant=None, build=None, **kwargs) -> ReservoirEngine:
     """Engine accessor with a bounded LRU cache (reservoirs are frozen).
 
-    Cached per (params, backend) so repeated ``run_reservoir`` calls reuse
-    the compiled rollout instead of rebuilding plan + jit each time.  The
-    entry is invalidated by everything the engine bakes in at construction
+    Without ``tenant`` the key is (id(params), backend) — the
+    ``run_reservoir`` fast path — and non-default kwargs bypass the cache.
+    With ``tenant`` (a registry ``(name, version)`` tuple) the key is the
+    *registry identity*: stable across republishes, so an equal-valued
+    readout under a new version can never alias the retired engine, and
+    hashable kwargs become part of the cached entry (a config change
+    rebuilds).  ``build`` overrides the constructor (the registry passes a
+    sharded-engine factory on multi-device servers).
+
+    Every entry is invalidated by what the engine bakes in at construction
     — the reservoir matrix, the *readout* (so a stale compiled rollout is
     never served after ``fit_readout`` replaces ``w_out``), and the
     leak/mode/precision config.  At most :data:`ENGINE_CACHE_MAX` engines
     stay resident (least recently used evicted first), so a multi-tenant
     server's memory is bounded — ``engine_cache_stats()`` exposes the
-    hit/miss/eviction counters.  NOTE: a cached engine holds its params
-    (and compiled programs) alive until it is evicted or
-    ``engine_cache_clear()`` runs — the cache trades bounded pinning for
-    compile reuse.  Non-default kwargs (stats, interpret, specialize,
-    ...) bypass the cache — construct :class:`ReservoirEngine` directly
-    for those.
+    hit/miss/eviction counters, globally and per tenant.  NOTE: a cached
+    engine holds its params (and compiled programs) alive until it is
+    evicted or ``engine_cache_clear()`` runs — the cache trades bounded
+    pinning for compile reuse.
     """
-    key = (id(params), "xla" if backend == "auto" else backend)
-    eng = _engine_cache.get(key)
-    cfg = params.config
-    stale = (eng is None or eng.params is not params
-             or eng._w_out is not params.w_out
-             or eng.params.w is not params.w
-             or (eng.config.leak, eng.config.mode, eng.config.state_bits)
-             != (cfg.leak, cfg.mode, cfg.state_bits))
-    if stale or kwargs:
-        eng = ReservoirEngine(params, backend=backend, **kwargs)
-        if not kwargs:
-            _engine_cache[key] = eng
+    bk = "xla" if backend == "auto" else backend
+    if tenant is None:
+        key = (id(params), bk)
+        ent = _engine_cache.get(key)
+        eng = ent[0] if ent is not None else None
+        if eng is None or kwargs or _params_stale(eng, params):
+            eng = (build or ReservoirEngine)(params, backend=backend,
+                                            **kwargs)
+            if not kwargs and build is None:
+                _cache_put(key, eng, ())
+        else:
             _engine_cache.move_to_end(key)
-            while len(_engine_cache) > ENGINE_CACHE_MAX:
-                _engine_cache.popitem(last=False)
-                _engine_cache_stats["evictions"] += 1
-            _engine_cache_stats["misses"] += 1
-    else:
+            _engine_cache_stats["hits"] += 1
+        return eng
+
+    name = tenant[0] if isinstance(tenant, tuple) else tenant
+    counters = _tenant_counters(name)
+    try:
+        sig = tuple(sorted(kwargs.items()))
+        hash(sig)
+    except TypeError as e:
+        raise TypeError(
+            "engine_for(tenant=...) caches on the kwargs signature, so "
+            f"every kwarg must be hashable: {kwargs}") from e
+    key = (tenant, bk)
+    ent = _engine_cache.get(key)
+    if (ent is not None and ent[1] == sig
+            and not _params_stale(ent[0], params)):
         _engine_cache.move_to_end(key)
         _engine_cache_stats["hits"] += 1
+        counters["hits"] += 1
+        return ent[0]
+    if build is not None:
+        eng = build(params, backend=backend, **kwargs)
+    else:
+        eng = ReservoirEngine(params, backend=backend, tenant=name, **kwargs)
+    _cache_put(key, eng, sig)
+    counters["misses"] += 1
     return eng
 
 
 __all__ = ["ENGINE_CACHE_MAX", "ReservoirEngine", "engine_for",
-           "engine_cache_clear", "engine_cache_stats", "ServeStats",
-           "PaddingBucketer", "RolloutRequest", "MicroBatch"]
+           "engine_cache_clear", "engine_cache_demote",
+           "engine_cache_stats", "ServeStats",
+           "PaddingBucketer", "RolloutRequest", "MicroBatch",
+           "SubmitSpec", "RolloutResult"]

@@ -11,15 +11,23 @@ This module serves the same requests decode-style instead:
 * the engine runs in fixed ``chunk_steps`` segments, and between chunks
   finished sequences **retire** and queued ones are **admitted mid-flight**,
 * each live slot's reservoir state is carried across chunks through the
-  engine's ``return_final_state`` chunk API, so the chunked trajectory is
+  engine's ``run_segment`` chunk API, so the chunked trajectory is
   bit-identical to a one-shot rollout of the same inputs — the recurrence
   is stateful per sequence, which is exactly what makes reservoir
   continuous batching more than prompt re-padding.
 
+The pool is **multi-tenant**: every slot is tagged with the engine its
+request resolved to at admission (via a
+:class:`~repro.serve.registry.ModelRegistry`), one FIFO interleaves all
+tenants under per-tenant quotas/deadlines, and each chunk issues one
+fused call per *active model* at the full pool shape — rows are
+independent through the recurrence, so cross-tenant interleaving keeps
+every sequence bit-identical to its single-tenant run.
+
 :class:`ContinuousBatcher` owns the slot pool mechanics;
 :class:`AsyncReservoirServer` adds the time-stamped arrival queue, the
 virtual clock, and queue-wait / time-to-first-prediction / slot-occupancy
-telemetry on :class:`~repro.serve.stats.ServeStats`.
+telemetry on :class:`~repro.serve.stats.ServeStats` (per tenant too).
 """
 
 from __future__ import annotations
@@ -33,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.api import _UNSET, RolloutResult, SubmitSpec, warn_deprecated
 from repro.serve.batching import RolloutRequest
 from repro.serve.stats import ServeStats
 
@@ -50,6 +59,11 @@ class QueuedRequest:
     request still queued past it is dropped at the next admission sweep —
     counted in ``ServeStats.timed_out`` — instead of occupying a slot for
     an answer nobody is waiting for anymore.
+
+    ``model`` routes the request to a registry tenant;
+    ``pinned_version`` is stamped when the request first seats and sticks
+    for its whole life — a live swap never migrates in-flight (or
+    shrink-re-admitted) work to the new version.
     """
 
     request: RolloutRequest
@@ -62,6 +76,12 @@ class QueuedRequest:
     requeued: bool = False               # back in the queue after a shrink:
     #                                      the next seat is a re-admission
     #                                      and must not double-count stats
+    model: str | None = None             # registry tenant (None = default)
+    pinned_version: int | None = None    # frozen at first admission
+    want_states: bool | None = None      # per-request output contract
+    #                                      (None = the pool's default)
+    as_result: bool = False              # SubmitSpec submission: answer a
+    #                                      RolloutResult, not a bare array
 
     @property
     def uid(self) -> Any:
@@ -90,25 +110,44 @@ class _DeviceChunk:
 class ContinuousBatcher:
     """A fixed pool of batch slots rolled forward ``chunk_steps`` at a time.
 
-    Every chunk is ONE engine call of the static shape
+    Single-tenant chunks are ONE engine call of the static shape
     ``(n_slots, chunk_steps, input_dim)`` — free slots ride along as zero
     rows — with the pool's reservoir states passed as ``x0`` and the
-    post-chunk states carried via ``return_final_state``.  Rows are
+    post-chunk states carried through ``run_segment``.  Rows are
     independent through the recurrence (the batched matmuls and the
     elementwise epilogue never mix rows), so a sequence's chunked
     trajectory equals its one-shot rollout bit for bit.
+
+    Multi-tenant chunks group the occupied slots by their admission-pinned
+    engine and issue one fused call *per active model*, each at the full
+    pool shape — the same shape (and therefore the same compiled program
+    and the same per-row arithmetic) as the single-tenant chunk, which is
+    what keeps cross-tenant interleaving bit-exact.  Post-chunk states
+    merge by exact row selection.
     """
 
     def __init__(self, engine, *, n_slots: int = 8, chunk_steps: int = 16,
-                 return_states: bool | None = None,
-                 zero_copy: bool | None = None, warm: bool = True):
+                 want_states: bool | None = None,
+                 return_states: bool | None = _UNSET,
+                 zero_copy: bool | None = None, warm: bool = True,
+                 resolver=None):
         assert n_slots >= 1 and chunk_steps >= 1
         self.engine = engine
         self.n_slots = n_slots
         self.chunk_steps = chunk_steps
-        if return_states is None:
-            return_states = not engine.has_readout
-        self.return_states = return_states
+        if return_states is not _UNSET:
+            warn_deprecated(
+                "ContinuousBatcher(return_states=...) is deprecated; "
+                "pass want_states=...")
+            if want_states is None:
+                want_states = return_states
+        if want_states is None:
+            want_states = not engine.has_readout
+        self.want_states = want_states
+        # admission hook: qreq -> engine (a registry-backed server routes
+        # per-tenant here); None pins every slot to the default engine
+        self._resolver = resolver
+        self._slot_engines = [engine] * n_slots
         # zero-copy chunk serving: request inputs move to the device ONCE
         # at admission (into a resident (n_slots, max_chunks, cs, I)
         # buffer), a single jitted gather assembles each chunk's input
@@ -151,8 +190,29 @@ class ContinuousBatcher:
                 donate_argnums=(0,))
         self.last_take: dict = {}               # slot -> steps, last chunk
         self.last_retired_slots: list = []
+        self.last_models: dict = {}             # slot -> model, last chunk
         if warm:
             self._warm()
+
+    @property
+    def return_states(self) -> bool:
+        """Deprecated alias of ``want_states`` (kept one release)."""
+        return self.want_states
+
+    def _want_of(self, qreq: QueuedRequest) -> bool:
+        return (self.want_states if qreq.want_states is None
+                else qreq.want_states)
+
+    def _check_dims(self, engine) -> None:
+        cfg = engine.config
+        if (cfg.input_dim != self._in_dim
+                or cfg.reservoir_dim != self._dim):
+            raise ValueError(
+                f"engine dims (I={cfg.input_dim}, R={cfg.reservoir_dim}) "
+                f"do not match the pool's (I={self._in_dim}, "
+                f"R={self._dim}): models sharing a slot pool must share "
+                "input/reservoir dims — serve differently-sized models "
+                "from separate pools")
 
     def _warm(self) -> None:
         """Pre-compile the pool's exact chunk program + per-slot ops.
@@ -164,26 +224,43 @@ class ContinuousBatcher:
         makespan.  Bypasses the engine's public API so warmup never
         pollutes ``ServeStats`` or the request telemetry.
         """
-        if not self.return_states and not self.engine.has_readout:
+        if not self.want_states and not self.engine.has_readout:
             return      # run_chunk will raise the clear "readout not
             #             trained" error; nothing sane to warm
-        x0 = jnp.zeros((self.n_slots, self._dim), jnp.float32)
         if self.zero_copy:
-            u = self._gather(self._u_dev,
-                             jnp.zeros(self.n_slots, jnp.int32))
             # admission's device ops: one warm call each compiles the
             # program every slot index reuses (the index is an operand)
+            self._gather(self._u_dev, jnp.zeros(self.n_slots, jnp.int32))
             row = jnp.zeros((self._dim,), jnp.float32)
             self._states.at[0].set(row)
             self._u_dev = self._lane_set(
                 self._u_dev, 0,
                 jnp.zeros(self._u_dev.shape[1:], jnp.float32))
-        else:
-            u = jnp.zeros((self.n_slots, self.chunk_steps, self._in_dim),
-                          jnp.float32)
-        out, _xf = self.engine._dispatch(u, x0, not self.return_states,
-                                         True, self.zero_copy)
-        jax.block_until_ready(out)
+        self.warm_engine(self.engine)
+
+    def warm_engine(self, engine, want_states: bool | None = None) -> None:
+        """Compile ``engine``'s pool-shaped chunk program(s), off the
+        serving clock.
+
+        Used at construction for the default engine, and by
+        :meth:`ModelRegistry.publish` to compile a *new model version
+        behind live traffic* — the swap cutover then costs the scheduler
+        nothing.  On the zero-copy path both chunk variants are warmed:
+        the donated single-tenant launch and the non-donated variant that
+        mixed (multi-model) chunks use.  Bypasses the engine's public API
+        so warmup never pollutes ``ServeStats``.
+        """
+        self._check_dims(engine)
+        if want_states is None:
+            want_states = (self.want_states if engine.has_readout
+                           else True)
+        u = jnp.zeros((self.n_slots, self.chunk_steps, self._in_dim),
+                      jnp.float32)
+        for donate in ((True, False) if self.zero_copy else (False,)):
+            x0 = jnp.zeros((self.n_slots, self._dim), jnp.float32)
+            out, _xf = engine._dispatch(u, x0, not want_states, True,
+                                        donate)
+            jax.block_until_ready(out)
 
     @property
     def live(self) -> int:
@@ -199,8 +276,22 @@ class ContinuousBatcher:
         return self._slots.index(None)
 
     def admit(self, qreq: QueuedRequest) -> int:
-        """Seat a request in a free slot (zero state, or its ``x0``)."""
+        """Seat a request in a free slot (zero state, or its ``x0``).
+
+        The slot is tagged with the engine the request resolves to —
+        through the ``resolver`` (registry routing, which also pins the
+        model version on the request) or the pool default — and keeps it
+        for the request's whole life.
+        """
+        eng = (self.engine if self._resolver is None
+               else self._resolver(qreq))
+        self._check_dims(eng)
+        if not self._want_of(qreq) and not eng.has_readout:
+            raise ValueError(
+                "readout not trained on the serving engine; submit with "
+                "want_states=True")
         slot = self._free_slot()
+        self._slot_engines[slot] = eng
         self._slots[slot] = qreq
         self._pos[slot] = 0
         self._chunks[slot] = []
@@ -244,6 +335,15 @@ class ContinuousBatcher:
         finish inside the chunk stop accumulating output at their real
         length (the recurrence is causal, so the zero-padded tail steps
         cannot reach them).
+
+        Occupied slots are grouped by their admission-pinned
+        ``(engine, want_states)`` and the chunk issues one fused
+        ``run_segment`` per group, every one at the full pool shape —
+        a slot's rows go through exactly the arithmetic they would in a
+        single-tenant pool, so interleaving tenants (or running both
+        sides of a live swap) is bit-exact.  A single-group chunk is
+        byte-for-byte the old fast path: one call, donated carry on the
+        zero-copy path.
         """
         cs = self.chunk_steps
         take: dict[int, int] = {}
@@ -272,30 +372,63 @@ class ContinuousBatcher:
                 u_host[i, :len(seg)] = seg
                 take[i] = len(seg)
             u = jnp.asarray(u_host)
-        fn = (self.engine.rollout if self.return_states
-              else self.engine.predictions)
-        # zero-copy: the carried state buffer is donated to the launch
-        # (this batcher owns it and immediately replaces it with xf), and
-        # the per-chunk host sync is deferred to retirement
-        out, xf = fn(u, x0=self._states, real_steps=sum(take.values()),
-                     return_final_state=True, donate_state=self.zero_copy,
-                     defer_sync=self.zero_copy)
-        if not self.zero_copy:
-            self.host_syncs += 1
-            out = np.asarray(out)
-        self._states = xf
-        retired = []
-        retired_slots = []
-        chunk = _DeviceChunk(out) if self.zero_copy else None
-        for i, n in take.items():
+        # group occupied slots by pinned (engine, contract); slot order
+        # inside and across groups is deterministic (dict insertion
+        # follows slot index)
+        groups: dict = {}
+        for i, q in enumerate(self._slots):
+            if q is None:
+                continue
+            eng = self._slot_engines[i]
+            want = self._want_of(q)
+            groups.setdefault((id(eng), want), (eng, want, []))[2].append(i)
+        if not groups:
+            # empty pool (direct run_chunk call): keep the old contract of
+            # one inert full-pool roll on the default engine
+            groups = {None: (self.engine, self.want_states, [])}
+        single = len(groups) == 1
+        prev = self._states
+        new_states = None
+        for eng, want, slots in groups.values():
+            # zero-copy single group: the carried state buffer is donated
+            # to the launch (this batcher owns it and immediately replaces
+            # it with xf).  With several groups every call reads ``prev``,
+            # so nothing may donate it.  Host syncs stay deferred to
+            # retirement either way.
+            donate = self.zero_copy and single
+            out, xf = eng.run_segment(
+                u, prev, want_states=want,
+                real_steps=sum(take.get(i, 0) for i in slots),
+                donate_state=donate, defer_sync=self.zero_copy)
+            if single:
+                new_states = xf
+            else:
+                # exact row selection: where() copies rows unchanged, so
+                # the merge cannot perturb bit-exactness
+                sel = np.zeros(self.n_slots, bool)
+                sel[slots] = True
+                new_states = jnp.where(
+                    jnp.asarray(sel)[:, None], xf,
+                    prev if new_states is None else new_states)
             if self.zero_copy:
                 # the whole device-side chunk buffer is shared by its
                 # riders (each remembering its real length); no per-slot
                 # device op, no host transfer until a rider retires
-                self._chunks[i].append((chunk, n))
+                chunk = _DeviceChunk(out)
+                for i in slots:
+                    self._chunks[i].append((chunk, take[i]))
             else:
-                self._chunks[i].append(out[i, :n].copy())
+                self.host_syncs += 1
+                out_h = np.asarray(out)
+                for i in slots:
+                    self._chunks[i].append(out_h[i, :take[i]].copy())
+        self._states = new_states if new_states is not None else prev
+        models = {}
+        for i, n in take.items():
             self._pos[i] += n
+            models[i] = self._slots[i].model
+        retired = []
+        retired_slots = []
         # retire in a second pass: a retirement materializes the shared
         # chunk buffer (rewriting every rider's entry), so every rider
         # must have its entry before the first retiree triggers that
@@ -306,9 +439,12 @@ class ContinuousBatcher:
                 retired_slots.append(i)
                 self._slots[i] = None
                 self._chunks[i] = []
-        # per-slot view of the chunk just run, for per-shard telemetry
+                self._slot_engines[i] = self.engine
+        # per-slot view of the chunk just run, for per-shard/tenant
+        # telemetry
         self.last_take = dict(take)
         self.last_retired_slots = retired_slots
+        self.last_models = models
         return retired, sum(take.values())
 
     def _materialize(self, chunk: _DeviceChunk) -> None:
@@ -377,7 +513,17 @@ class AsyncReservoirServer:
     (or repeated ``step()`` calls) drains the queue: admit every arrived
     request that fits the pool, roll one chunk, retire finished sequences,
     repeat.  Admission is strictly FIFO in (arrival_time, submission
-    order).
+    order), except that a request held back only by its tenant's
+    concurrency quota steps aside for later arrivals (it stays queued and
+    is re-considered every sweep).
+
+    Attach a :class:`~repro.serve.registry.ModelRegistry` to serve many
+    models from one pool: a :class:`~repro.serve.api.SubmitSpec` with
+    ``model="name"`` resolves (and pins) the registry's active version at
+    admission, the chunk loop groups slots per model, and per-tenant
+    telemetry lands in ``tenant_stats``.  ``registry.publish()`` swaps a
+    model live: in-flight slots keep their pinned engine, new admissions
+    take the new one.
 
     The server keeps a virtual clock ``now``: it advances by each chunk's
     measured wall time (or the fixed ``chunk_time`` if given — useful for
@@ -387,39 +533,129 @@ class AsyncReservoirServer:
     """
 
     def __init__(self, engine, *, n_slots: int = 8, chunk_steps: int = 16,
-                 return_states: bool | None = None,
+                 want_states: bool | None = None,
+                 return_states: bool | None = _UNSET,
                  stats: ServeStats | None = None,
                  chunk_time: float | None = None,
                  batcher: ContinuousBatcher | None = None,
-                 zero_copy: bool | None = None):
-        self.batcher = batcher if batcher is not None else ContinuousBatcher(
-            engine, n_slots=n_slots, chunk_steps=chunk_steps,
-            return_states=return_states, zero_copy=zero_copy)
+                 zero_copy: bool | None = None,
+                 registry=None):
+        if return_states is not _UNSET:
+            warn_deprecated(
+                "AsyncReservoirServer(return_states=...) is deprecated; "
+                "pass want_states=... (or set want_states per request on "
+                "SubmitSpec)")
+            if want_states is None:
+                want_states = return_states
+        if batcher is None:
+            batcher = ContinuousBatcher(
+                engine, n_slots=n_slots, chunk_steps=chunk_steps,
+                want_states=want_states, zero_copy=zero_copy,
+                resolver=self._resolve_engine)
+        elif batcher._resolver is None:
+            batcher._resolver = self._resolve_engine
+        self.batcher = batcher
         self.stats = stats if stats is not None else engine.stats
         self.chunk_time = chunk_time
         self.now = 0.0
-        self.results: dict[Any, np.ndarray] = {}
+        self.results: dict[Any, Any] = {}
         self._queue: list[tuple[float, int, QueuedRequest]] = []
         self._seq = 0
+        self.registry = None
+        self.tenant_stats: dict[str, ServeStats] = {}
+        if registry is not None:
+            registry.attach(self)
+
+    # -- multi-tenant plumbing -----------------------------------------------
+    def _tstats(self, model: str | None) -> ServeStats | None:
+        if model is None:
+            return None
+        st = self.tenant_stats.get(model)
+        if st is None:
+            st = self.tenant_stats[model] = ServeStats()
+        return st
+
+    def tenant_summary(self) -> ServeStats:
+        """Per-tenant breakdown merged into one view (``.shards`` keyed by
+        model name)."""
+        names = sorted(self.tenant_stats)
+        return ServeStats.merge([self.tenant_stats[n] for n in names],
+                                labels=names)
+
+    def _tenant_engine(self, name: str, version: int):
+        """Engine for a pinned (model, version) — the seam the sharded
+        server overrides to build mesh-mapped engines instead."""
+        return self.registry.engine(name, version)
+
+    def _resolve_engine(self, qreq: QueuedRequest):
+        """Admission-time routing: pin the model's active version to the
+        request (a later ``publish()`` must not migrate it) and return its
+        engine."""
+        if qreq.model is None or self.registry is None:
+            return self.batcher.engine
+        if qreq.pinned_version is None:
+            qreq.pinned_version = self.registry.active_version(qreq.model)
+        return self._tenant_engine(qreq.model, qreq.pinned_version)
+
+    def prewarm_model(self, name: str, version: int):
+        """Build + compile a model version against this pool's shapes
+        before any request routes to it — ``publish()`` calls this on
+        every attached server so cutover never compiles under traffic."""
+        eng = self._tenant_engine(name, version)
+        self.batcher.warm_engine(eng)
+        return eng
 
     # -- queue ---------------------------------------------------------------
-    def submit(self, request: RolloutRequest,
-               arrival_time: float | None = None,
+    def submit(self, request, arrival_time: float | None = None,
                deadline: float | None = None) -> QueuedRequest:
-        """Enqueue one request; ``arrival_time`` defaults to ``now``.
+        """Enqueue one :class:`SubmitSpec`; ``arrival_time`` defaults to
+        ``now``.
 
-        ``deadline`` is an absolute time on the server's clock: a request
-        still waiting in the queue past it is dropped (``timed_out`` in
-        stats) rather than seated.  A request already in a slot always
-        runs to completion.
+        ``deadline`` (or ``spec.deadline``, which wins) is an absolute
+        time on the server's clock: a request still waiting in the queue
+        past it is dropped (``timed_out`` in stats) rather than seated.
+        A request already in a slot always runs to completion.  A spec
+        naming a ``model`` routes through the attached registry and
+        inherits its per-tenant deadline policy when neither deadline is
+        given.
+
+        Passing a bare :class:`RolloutRequest` still works for one
+        release (with a DeprecationWarning) and answers with the raw
+        output array; specs answer with :class:`RolloutResult`.
         """
         at = self.now if arrival_time is None else float(arrival_time)
-        qreq = QueuedRequest(request, arrival_time=at, seq=self._seq,
-                             deadline=None if deadline is None
-                             else float(deadline))
+        if isinstance(request, SubmitSpec):
+            spec = request
+            if spec.model is not None and self.registry is None:
+                raise ValueError(
+                    f"SubmitSpec routes to model {spec.model!r} but this "
+                    "server has no registry attached")
+            uid = spec.uid if spec.uid is not None else f"req{self._seq}"
+            dl = spec.deadline if spec.deadline is not None else deadline
+            if dl is None and spec.model is not None:
+                rel = self.registry.deadline_s(spec.model)
+                if rel is not None:
+                    dl = at + rel
+            qreq = QueuedRequest(
+                RolloutRequest(uid, np.asarray(spec.inputs, np.float32),
+                               x0=spec.x0),
+                arrival_time=at, seq=self._seq,
+                deadline=None if dl is None else float(dl),
+                model=spec.model, want_states=spec.want_states,
+                as_result=True)
+        else:
+            warn_deprecated(
+                "submit(RolloutRequest, ...) is deprecated; submit a "
+                "SubmitSpec (results become RolloutResult — read .output)")
+            qreq = QueuedRequest(request, arrival_time=at, seq=self._seq,
+                                 deadline=None if deadline is None
+                                 else float(deadline))
         self._seq += 1
         heapq.heappush(self._queue, (at, qreq.seq, qreq))
         self.stats.record_enqueue()
+        ts = self._tstats(qreq.model)
+        if ts is not None:
+            ts.record_enqueue()
         return qreq
 
     @property
@@ -430,7 +666,20 @@ class AsyncReservoirServer:
     def drained(self) -> bool:
         return not self._queue and self.batcher.live == 0
 
+    def _over_quota(self, qreq: QueuedRequest) -> bool:
+        """Would seating this request push its tenant past its registry
+        concurrency quota (live slots of the same model)?"""
+        if qreq.model is None or self.registry is None:
+            return False
+        quota = self.registry.quota(qreq.model)
+        if quota is None:
+            return False
+        live = sum(1 for q in self.batcher._slots
+                   if q is not None and q.model == qreq.model)
+        return live >= quota
+
     def _admit_arrived(self) -> None:
+        held: list[tuple[float, int, QueuedRequest]] = []
         while self._queue and self._queue[0][0] <= self.now:
             qreq = self._queue[0][2]
             if qreq.deadline is not None and self.now > qreq.deadline:
@@ -438,16 +687,55 @@ class AsyncReservoirServer:
                 # nobody is waiting for anymore
                 heapq.heappop(self._queue)
                 self.stats.record_timeout()
+                ts = self._tstats(qreq.model)
+                if ts is not None:
+                    ts.record_timeout()
                 continue
             if not self.batcher.has_free_slot():
                 break
+            if self._over_quota(qreq):
+                # set the request aside for this sweep so tenants under
+                # quota seat past it — it rejoins the queue (original
+                # FIFO key) for the next sweep
+                held.append(heapq.heappop(self._queue))
+                self.stats.record_quota_hold()
+                ts = self._tstats(qreq.model)
+                if ts is not None:
+                    ts.record_quota_hold()
+                continue
             heapq.heappop(self._queue)
             qreq.admit_time = self.now
             if qreq.requeued:
                 qreq.requeued = False
             else:
                 self.stats.record_admission(self.now - qreq.arrival_time)
+                ts = self._tstats(qreq.model)
+                if ts is not None:
+                    ts.record_admission(self.now - qreq.arrival_time)
             self.batcher.admit(qreq)
+        for entry in held:
+            heapq.heappush(self._queue, entry)
+
+    # -- results -------------------------------------------------------------
+    def _package(self, qreq: QueuedRequest, out) -> Any:
+        """Raw array for legacy RolloutRequest submissions, RolloutResult
+        for specs."""
+        if not qreq.as_result:
+            return out
+        want = self.batcher._want_of(qreq)
+        timings = {
+            "arrival_time": qreq.arrival_time,
+            "admit_time": qreq.admit_time,
+            "finish_time": qreq.finish_time,
+            "queue_wait_s": qreq.admit_time - qreq.arrival_time,
+            "latency_s": qreq.finish_time - qreq.arrival_time,
+        }
+        if qreq.model is not None:
+            timings["model"] = qreq.model
+            timings["version"] = qreq.pinned_version
+        return RolloutResult(preds=None if want else out,
+                             states=out if want else None,
+                             timings=timings)
 
     # -- event loop ----------------------------------------------------------
     def step(self) -> bool:
@@ -471,19 +759,32 @@ class AsyncReservoirServer:
             total_steps=self.batcher.n_slots * self.batcher.chunk_steps)
         for qreq, out in retired:
             qreq.finish_time = self.now
-            self.results[qreq.uid] = out
-            self.stats.record_completion()
+            latency = self.now - qreq.arrival_time
+            self.results[qreq.uid] = self._package(qreq, out)
+            self.stats.record_completion(latency)
+            ts = self._tstats(qreq.model)
+            if ts is not None:
+                ts.record_completion(latency)
         # first-output marks: every seated-or-just-retired request that has
         # produced output by the end of this chunk
         for qreq in list(self.batcher._slots) + [q for q, _ in retired]:
             if (qreq is not None and qreq.first_output_time is None
                     and qreq.admit_time is not None):
                 qreq.first_output_time = self.now
-                self.stats.record_first_output(self.now - qreq.arrival_time)
+                ttfp = self.now - qreq.arrival_time
+                self.stats.record_first_output(ttfp)
+                ts = self._tstats(qreq.model)
+                if ts is not None:
+                    ts.record_first_output(ttfp)
+                res = self.results.get(qreq.uid)
+                if isinstance(res, RolloutResult):
+                    res.timings["first_output_time"] = self.now
+                    res.timings["ttfp_s"] = ttfp
         return True
 
     def run(self) -> dict:
-        """Drain the queue; returns {uid: (T_request, O or R) output}."""
+        """Drain the queue; returns ``{uid: RolloutResult}`` (raw arrays
+        for legacy RolloutRequest submissions)."""
         while self.step():
             pass
         return self.results

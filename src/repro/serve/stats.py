@@ -33,6 +33,10 @@ class ServeStats:
     admitted: int = 0              # requests seated in a slot
     completed: int = 0             # requests fully served
     timed_out: int = 0             # queued requests dropped past deadline
+    quota_held: int = 0            # admission deferrals: a free slot
+    #                                existed but the request's tenant was
+    #                                at its concurrency quota (counted per
+    #                                sweep the request sat out)
     chunks: int = 0                # scheduler chunks executed
     queue_wait_s: float = 0.0      # summed arrival -> admission wait
     queue_wait_max_s: float = 0.0
@@ -41,7 +45,11 @@ class ServeStats:
     ttfp_max_s: float = 0.0
     slot_steps_live: int = 0       # chunk steps that consumed real input
     slot_steps_total: int = 0      # chunk steps across the whole pool
-    # per-shard breakdown attached by merge(); None on a plain instance
+    # arrival -> completion latencies (seconds), one per completed request
+    # that reported one — the tail-latency record the p99 gates read
+    latencies: list = dataclasses.field(default_factory=list, repr=False)
+    # per-shard / per-tenant breakdown attached by merge(); None on a
+    # plain instance
     shards: dict | None = dataclasses.field(default=None, repr=False)
     _EWMA_ALPHA = 0.2
 
@@ -50,7 +58,8 @@ class ServeStats:
     _SUM_FIELDS = ("calls", "deferred_calls", "sequences", "steps_real",
                    "steps_padded",
                    "seconds", "enqueued", "admitted", "completed",
-                   "timed_out", "chunks", "queue_wait_s", "first_outputs",
+                   "timed_out", "quota_held", "chunks", "queue_wait_s",
+                   "first_outputs",
                    "ttfp_s", "slot_steps_live", "slot_steps_total")
 
     @staticmethod
@@ -78,6 +87,8 @@ class ServeStats:
         if merged.calls:
             merged.latency_ewma_s = sum(
                 p.latency_ewma_s * p.calls for p in parts) / merged.calls
+        for p in parts:
+            merged.latencies.extend(p.latencies)
         merged.shards = dict(zip(labels, parts))
         return merged
 
@@ -118,13 +129,23 @@ class ServeStats:
         self.ttfp_s += ttfp_s
         self.ttfp_max_s = max(self.ttfp_max_s, ttfp_s)
 
-    def record_completion(self) -> None:
+    def record_completion(self, latency_s: float | None = None) -> None:
+        """One request fully served; ``latency_s`` (arrival -> finish on
+        the server's clock) feeds the tail-latency percentiles."""
         self.completed += 1
+        if latency_s is not None:
+            self.latencies.append(float(latency_s))
 
     def record_timeout(self) -> None:
         """One queued request dropped because its deadline passed before a
         slot freed up (it never occupied one)."""
         self.timed_out += 1
+
+    def record_quota_hold(self) -> None:
+        """One admission sweep skipped a request whose tenant was at its
+        concurrency quota (the request stays queued, other tenants seat
+        past it — quota never head-of-line blocks the FIFO)."""
+        self.quota_held += 1
 
     def record_chunk(self, *, live_steps: int, total_steps: int) -> None:
         """One scheduler chunk: ``live_steps`` of the pool's
@@ -164,6 +185,20 @@ class ServeStats:
         the queue) don't skew or crash the mean."""
         return self.ttfp_s / self.first_outputs if self.first_outputs else 0.0
 
+    def latency_percentile(self, p: float) -> float:
+        """The ``p``-th percentile (0..100, nearest-rank) of recorded
+        arrival -> completion latencies; 0.0 when none were recorded."""
+        if not self.latencies:
+            return 0.0
+        ordered = sorted(self.latencies)
+        rank = max(0, min(len(ordered) - 1,
+                          int(round(p / 100.0 * len(ordered))) - 1))
+        return ordered[rank]
+
+    @property
+    def p99_latency_s(self) -> float:
+        return self.latency_percentile(99.0)
+
     @property
     def slot_occupancy(self) -> float:
         """Fraction of pool chunk-steps that consumed real request input."""
@@ -200,6 +235,11 @@ class ServeStats:
                 "max_ttfp_ms": self.ttfp_max_s * 1e3,
                 "slot_occupancy": self.slot_occupancy,
             })
+            if self.quota_held:
+                out["quota_held"] = self.quota_held
+            if self.latencies:
+                out["p50_latency_ms"] = self.latency_percentile(50.0) * 1e3
+                out["p99_latency_ms"] = self.p99_latency_s * 1e3
         if self.shards is not None:
             out["shards"] = {label: part.summary()
                              for label, part in self.shards.items()}

@@ -1,0 +1,136 @@
+"""The SubmitSpec migration contract.
+
+Two halves: (a) the deprecated boolean-twin kwargs still work for one
+release and warn, answering exactly what they used to; (b) a grep-style
+lint pins that no internal caller (src/, examples/, benchmarks/) still
+passes one — the shims exist for *external* callers only.
+"""
+
+import pathlib
+import re
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.esn import ESNConfig, fit_readout, init_esn, run_reservoir
+from repro.serve import (AsyncReservoirServer, ReservoirEngine,
+                         RolloutRequest, RolloutResult, ServeStats,
+                         SubmitSpec)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+# A kwarg *pass* is `return_xxx=value`: no space before `=` (statement
+# assignments in the shim bodies have one — PEP8), value not `...` (the
+# shims' own warning strings).  Doc lines carry ``markup`` and are skipped.
+DEPRECATED = re.compile(
+    r"\breturn_(?:final_state|states|preds|final)=(?!\.\.\.)")
+
+
+def _params():
+    cfg = ESNConfig(reservoir_dim=64, element_sparsity=0.8, mode="fp32",
+                    leak=0.7, seed=3, block=32, output_dim=2)
+    p = init_esn(cfg)
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.standard_normal((40, 1)), jnp.float32)
+    states = run_reservoir(p, u, engine="scan")
+    y = jnp.concatenate([u, jnp.roll(u, 1)], axis=-1)
+    return fit_readout(p, states, y, lam=1e-2)
+
+
+class TestNoInternalDeprecatedCallers:
+    """CI lint: internal code must be fully on the SubmitSpec surface."""
+
+    @pytest.mark.parametrize("tree", ["src", "examples", "benchmarks"])
+    def test_tree_is_clean(self, tree):
+        offenders = []
+        for path in sorted((REPO / tree).rglob("*.py")):
+            for n, line in enumerate(
+                    path.read_text().splitlines(), start=1):
+                # def-sites of the shims themselves declare the kwarg
+                # with a _UNSET default; only *passing* a value is a
+                # migration miss
+                if (DEPRECATED.search(line) and "_UNSET" not in line
+                        and "``" not in line):
+                    offenders.append(f"{path.relative_to(REPO)}:{n}: "
+                                     f"{line.strip()}")
+        assert not offenders, (
+            "deprecated return_* kwargs passed by internal callers:\n"
+            + "\n".join(offenders))
+
+
+class TestDeprecatedShims:
+    def test_rollout_final_state_twin_warns_and_matches(self):
+        p = _params()
+        eng = ReservoirEngine(p)
+        u = jnp.ones((2, 8, 1), jnp.float32)
+        with pytest.warns(DeprecationWarning, match="run_segment"):
+            states, xf = eng.rollout(u, return_final_state=True)
+        res = eng.submit(SubmitSpec(u, want_states=True))
+        np.testing.assert_array_equal(np.asarray(states),
+                                      np.asarray(res.states))
+        np.testing.assert_array_equal(np.asarray(xf),
+                                      np.asarray(res.final_state))
+
+    def test_predictions_final_state_twin_warns(self):
+        p = _params()
+        eng = ReservoirEngine(p)
+        u = jnp.ones((2, 8, 1), jnp.float32)
+        with pytest.warns(DeprecationWarning, match="run_segment"):
+            preds, xf = eng.predictions(u, return_final_state=True)
+        assert preds.shape == (2, 8, 2) and xf.shape == (2, 64)
+
+    def test_server_rolloutrequest_submit_warns_answers_raw(self):
+        p = _params()
+        eng = ReservoirEngine(p, stats=ServeStats())
+        srv = AsyncReservoirServer(eng, n_slots=1, chunk_steps=8,
+                                   chunk_time=1.0)
+        with pytest.warns(DeprecationWarning, match="SubmitSpec"):
+            srv.submit(RolloutRequest(
+                uid="old", inputs=np.ones((8, 1), np.float32)))
+        out = srv.run()["old"]
+        # legacy submissions keep the bare-array contract
+        assert isinstance(out, np.ndarray) and out.shape == (8, 2)
+
+    def test_server_return_states_ctor_warns(self):
+        p = _params()
+        eng = ReservoirEngine(p, stats=ServeStats())
+        with pytest.warns(DeprecationWarning, match="want_states"):
+            srv = AsyncReservoirServer(eng, n_slots=1, chunk_steps=8,
+                                       chunk_time=1.0, return_states=True)
+        assert srv.batcher.want_states is True
+        assert srv.batcher.return_states is True    # silent alias
+
+    def test_spec_and_legacy_agree_bitwise(self):
+        """Same request through both surfaces: identical bytes out."""
+        p = _params()
+        rng = np.random.default_rng(5)
+        u = rng.standard_normal((16, 1)).astype(np.float32)
+
+        eng1 = ReservoirEngine(p, stats=ServeStats())
+        srv1 = AsyncReservoirServer(eng1, n_slots=2, chunk_steps=8,
+                                    chunk_time=1.0)
+        srv1.submit(SubmitSpec(u, uid="x"))
+        new = srv1.run()["x"]
+        assert isinstance(new, RolloutResult)
+
+        eng2 = ReservoirEngine(p, stats=ServeStats())
+        srv2 = AsyncReservoirServer(eng2, n_slots=2, chunk_steps=8,
+                                    chunk_time=1.0)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            srv2.submit(RolloutRequest(uid="x", inputs=u))
+        old = srv2.run()["x"]
+        np.testing.assert_array_equal(np.asarray(new.output), old)
+
+    def test_want_states_none_needs_readout(self):
+        cfg = ESNConfig(reservoir_dim=64, element_sparsity=0.8, mode="fp32",
+                        leak=0.7, seed=3, block=32, output_dim=2)
+        eng = ReservoirEngine(init_esn(cfg))
+        u = jnp.ones((8, 1), jnp.float32)
+        # auto mode falls back to states without a readout...
+        res = eng.submit(SubmitSpec(u))
+        assert res.states is not None and res.preds is None
+        # ...but an explicit predictions ask fails loudly
+        with pytest.raises(ValueError, match="readout not trained"):
+            eng.submit(SubmitSpec(u, want_states=False))

@@ -29,7 +29,8 @@ from repro.core.esn import ESNConfig, fit_readout, init_esn, run_reservoir
 from repro.dist import (DistributedReservoirServer, ShardedContinuousBatcher,
                         ShardedReservoirEngine)
 from repro.runtime.elastic import shrink_serve_plan
-from repro.serve import ReservoirEngine, RolloutRequest, ServeStats
+from repro.serve import (ReservoirEngine, RolloutRequest, ServeStats,
+                         SubmitSpec)
 
 N_DEV = len(jax.devices())
 multi_device = pytest.mark.skipif(
@@ -49,8 +50,7 @@ def _params(mode="fp32", dim=96, leak=0.7, seed=1, block=32):
 
 def _requests(lengths, seed=0):
     rng = np.random.default_rng(seed)
-    return [RolloutRequest(
-                uid=i, inputs=rng.standard_normal((t, 1)).astype(np.float32))
+    return [SubmitSpec(rng.standard_normal((t, 1)).astype(np.float32), uid=i)
             for i, t in enumerate(lengths)]
 
 
@@ -130,16 +130,17 @@ class TestSingleShardParity:
         u = jnp.asarray(rng.standard_normal((4, 12, 1)), jnp.float32)
         np.testing.assert_array_equal(np.asarray(sharded.rollout(u)),
                                       np.asarray(single.rollout(u)))
-        pr_s, xf_s = sharded.predictions(u, return_final_state=True)
-        pr_1, xf_1 = single.predictions(u, return_final_state=True)
+        z = jnp.zeros((4, 96), jnp.float32)
+        pr_s, xf_s = sharded.run_segment(u, z)
+        pr_1, xf_1 = single.run_segment(u, z)
         np.testing.assert_array_equal(np.asarray(pr_s), np.asarray(pr_1))
         np.testing.assert_array_equal(np.asarray(xf_s), np.asarray(xf_1))
 
     def test_serve_api_and_padding_accounting(self):
         p = _params()
         sharded = ShardedReservoirEngine(p, n_shards=1, stats=ServeStats())
-        res = sharded.serve(_requests([5, 9, 12], seed=2))
-        assert set(res) == {0, 1, 2} and res[1].shape == (9, 2)
+        res = sharded.submit_many(_requests([5, 9, 12], seed=2))
+        assert set(res) == {0, 1, 2} and res[1].output.shape == (9, 2)
         assert sharded.stats.steps_real > 0
 
     def test_distributed_server_matches_engine(self):
@@ -155,7 +156,7 @@ class TestSingleShardParity:
         res = srv.run()
         for r in reqs:
             want = np.asarray(single.predictions(jnp.asarray(r.inputs)))
-            np.testing.assert_allclose(res[r.uid], want,
+            np.testing.assert_allclose(res[r.uid].output, want,
                                        rtol=1e-4, atol=1e-6)
         merged = srv.shard_summary()
         assert merged.completed == 6 and merged.shards is not None
@@ -183,7 +184,9 @@ class TestMultiDeviceParity:
                                       np.asarray(single.predictions(u)))
         # chunked: carry the sharded final state, resume, compare the
         # stitched trajectory against the single-device one-shot
-        p1, xf = sharded.predictions(u[:, :6], return_final_state=True)
+        p1, xf = sharded.run_segment(u[:, :6],
+                                     jnp.zeros((u.shape[0], 96),
+                                               jnp.float32))
         p2 = sharded.predictions(u[:, 6:], x0=xf)
         np.testing.assert_array_equal(
             np.concatenate([np.asarray(p1), np.asarray(p2)], axis=1),
@@ -238,7 +241,7 @@ class TestMultiDeviceServer:
         assert len(res) == len(reqs)
         for r in reqs:
             want = np.asarray(single.predictions(jnp.asarray(r.inputs)))
-            np.testing.assert_allclose(res[r.uid], want,
+            np.testing.assert_allclose(res[r.uid].output, want,
                                        rtol=1e-4, atol=1e-6)
         merged = srv.shard_summary()
         assert merged.completed == len(reqs)
@@ -276,7 +279,7 @@ class TestMultiDeviceShrink:
         assert any(label.startswith("epoch1/") for label in merged.shards)
         for r in reqs:
             want = np.asarray(single.predictions(jnp.asarray(r.inputs)))
-            np.testing.assert_allclose(res[r.uid], want,
+            np.testing.assert_allclose(res[r.uid].output, want,
                                        rtol=1e-4, atol=1e-6)
 
     def test_shrink_resume_is_bit_exact_when_shapes_allow(self):
@@ -290,11 +293,79 @@ class TestMultiDeviceShrink:
                                          stats=ServeStats())
         u = np.random.default_rng(8).standard_normal((8, 1)).astype(
             np.float32)
-        srv.submit(RolloutRequest(uid="a", inputs=u), arrival_time=0.0)
+        srv.submit(SubmitSpec(u, uid="a"), arrival_time=0.0)
         srv.step()
         srv.shrink(failed=4)
         res = srv.run()
-        assert res["a"].shape == (8, 2)
+        assert res["a"].output.shape == (8, 2)
+
+
+@multi_device
+class TestMultiDeviceMultiModel:
+    """Registry-routed multi-tenant serving on the 8-shard pool: two
+    models interleaved through one sharded FIFO, each bit-exact against
+    its own single-tenant sharded serve at the same pool shape."""
+
+    def test_two_models_share_sharded_pool_bit_exact(self):
+        from repro.serve import ModelRegistry, SubmitSpec
+        pA, pB = _params(seed=1), _params(seed=2, leak=0.55)
+        rng = np.random.default_rng(12)
+        n_req, t = 8, 16
+        inputs = [rng.standard_normal((t, 1)).astype(np.float32)
+                  for _ in range(n_req)]
+
+        def serve(models):
+            reg = ModelRegistry()
+            reg.register("A", pA)
+            reg.register("B", pB)
+            eng = ShardedReservoirEngine(pA, n_shards=4, stats=ServeStats())
+            srv = DistributedReservoirServer(
+                eng, slots_per_shard=2, chunk_steps=8, chunk_time=1.0,
+                stats=ServeStats(), registry=reg)
+            for i, u in enumerate(inputs):
+                srv.submit(SubmitSpec(u, model=models(i), uid=i),
+                           arrival_time=0.0)
+            return srv.run(), srv
+
+        mixed, srv = serve(lambda i: "A" if i % 2 == 0 else "B")
+        only_a, _ = serve(lambda i: "A")
+        only_b, _ = serve(lambda i: "B")
+        for i in range(n_req):
+            ref = only_a if i % 2 == 0 else only_b
+            np.testing.assert_array_equal(np.asarray(mixed[i].output),
+                                          np.asarray(ref[i].output))
+        ts = srv.tenant_summary()
+        assert ts.shards["A"].completed == ts.shards["B"].completed == 4
+
+    def test_publish_swaps_on_sharded_server(self):
+        from repro.serve import ModelRegistry, SubmitSpec
+        p1, p2 = _params(seed=3), _params(seed=4)
+        reg = ModelRegistry()
+        reg.register("m", p1)
+        eng = ShardedReservoirEngine(p1, n_shards=4, stats=ServeStats())
+        srv = DistributedReservoirServer(
+            eng, slots_per_shard=1, chunk_steps=4, chunk_time=1.0,
+            stats=ServeStats(), registry=reg)
+        u = np.random.default_rng(5).standard_normal((12, 1)).astype(
+            np.float32)
+        pre = srv.submit(SubmitSpec(u, model="m", uid="pre"),
+                         arrival_time=0.0)
+        srv.step()                               # "pre" pinned to v1
+        plan = reg.publish("m", p2)
+        assert plan["version"] == 2
+        post = srv.submit(SubmitSpec(u, model="m", uid="post"))
+        res = srv.run()
+        assert pre.pinned_version == 1 and post.pinned_version == 2
+        assert srv.stats.timed_out == 0 and len(res) == 2
+        # v2's mesh-mapped engine serves post; v1 finished pre in place
+        ref1 = srv._tenant_engine("m", 1).predictions(
+            jnp.asarray(np.broadcast_to(u[None], (4,) + u.shape)))
+        ref2 = srv._tenant_engine("m", 2).predictions(
+            jnp.asarray(np.broadcast_to(u[None], (4,) + u.shape)))
+        np.testing.assert_array_equal(np.asarray(res["pre"].output),
+                                      np.asarray(ref1)[0])
+        np.testing.assert_array_equal(np.asarray(res["post"].output),
+                                      np.asarray(ref2)[0])
 
 
 class TestMultiDeviceSubprocess:

@@ -223,12 +223,12 @@ class TestFusedReadout:
                           mode="fp32", w_out=np.asarray(p.w_out))
         rng = np.random.default_rng(0)
         u = jnp.asarray(rng.standard_normal((6, 3, 1)), jnp.float32)
-        states, preds = fr(u, return_states=True, return_preds=True)
+        states, preds = fr(u, want_states=True, want_preds=True)
         want = np.asarray(states) @ np.asarray(p.w_out)
         np.testing.assert_allclose(np.asarray(preds), want,
                                    rtol=1e-5, atol=1e-6)
         # prediction-only launch (no states materialized) is identical
-        only = fr(u, return_states=False, return_preds=True)
+        only = fr(u, want_states=False, want_preds=True)
         np.testing.assert_array_equal(np.asarray(only), np.asarray(preds))
 
     def test_readout_every_k(self):
@@ -238,7 +238,7 @@ class TestFusedReadout:
                           readout_every=2)
         rng = np.random.default_rng(1)
         u = jnp.asarray(rng.standard_normal((6, 2, 1)), jnp.float32)
-        states, preds = fr(u, return_states=True, return_preds=True)
+        states, preds = fr(u, want_states=True, want_preds=True)
         assert preds.shape == (3, 2, 2)
         want = np.asarray(states)[1::2] @ np.asarray(p.w_out)
         np.testing.assert_allclose(np.asarray(preds), want,

@@ -15,7 +15,8 @@ import pytest
 
 from repro.core.esn import (ESNConfig, fit_readout, init_esn, run_reservoir)
 from repro.serve import (AsyncReservoirServer, ContinuousBatcher,
-                         ReservoirEngine, RolloutRequest, ServeStats)
+                         ReservoirEngine, RolloutRequest, ServeStats,
+                         SubmitSpec)
 
 
 def _params(mode="fp32", dim=96, leak=0.7, seed=1, block=32, trained=True):
@@ -33,9 +34,8 @@ def _params(mode="fp32", dim=96, leak=0.7, seed=1, block=32, trained=True):
 
 def _requests(lengths, seed=0, in_dim=1):
     rng = np.random.default_rng(seed)
-    return [RolloutRequest(
-                uid=i,
-                inputs=rng.standard_normal((t, in_dim)).astype(np.float32))
+    return [SubmitSpec(rng.standard_normal((t, in_dim)).astype(np.float32),
+                       uid=i)
             for i, t in enumerate(lengths)]
 
 
@@ -51,10 +51,10 @@ class TestEngineChunkAPI:
         p = _params(trained=False)
         rng = np.random.default_rng(0)
         u = jnp.asarray(rng.standard_normal((3, 8, 1)), jnp.float32)
-        states, xf = ReservoirEngine(p, backend=backend).rollout(
-            u, return_final_state=True)
-        np.testing.assert_array_equal(np.asarray(xf),
-                                      np.asarray(states)[:, -1])
+        res = ReservoirEngine(p, backend=backend).submit(
+            SubmitSpec(u, want_states=True))
+        np.testing.assert_array_equal(np.asarray(res.final_state),
+                                      np.asarray(res.states)[:, -1])
 
     @pytest.mark.parametrize("backend", ["xla", "pallas"])
     def test_chunk_resume_bit_identical(self, backend):
@@ -62,46 +62,49 @@ class TestEngineChunkAPI:
         eng = ReservoirEngine(p, backend=backend)
         rng = np.random.default_rng(1)
         u = jnp.asarray(rng.standard_normal((2, 16, 1)), jnp.float32)
+        z = jnp.zeros((2, 96), jnp.float32)
         full = np.asarray(eng.rollout(u))
-        s1, xf = eng.rollout(u[:, :8], return_final_state=True)
-        s2 = eng.rollout(u[:, 8:], x0=xf)
+        s1, xf = eng.run_segment(u[:, :8], z, want_states=True)
+        s2, _ = eng.run_segment(u[:, 8:], xf, want_states=True)
         np.testing.assert_array_equal(
             np.concatenate([np.asarray(s1), np.asarray(s2)], axis=1), full)
         pfull = np.asarray(eng.predictions(u))
-        p1, xf = eng.predictions(u[:, :8], return_final_state=True)
-        p2 = eng.predictions(u[:, 8:], x0=xf)
+        p1, xf = eng.run_segment(u[:, :8], z)
+        p2, _ = eng.run_segment(u[:, 8:], xf)
         np.testing.assert_array_equal(
             np.concatenate([np.asarray(p1), np.asarray(p2)], axis=1), pfull)
 
     def test_single_sequence_final_state_shape(self):
         p = _params(trained=False)
-        states, xf = ReservoirEngine(p).rollout(
-            jnp.ones((10, 1), jnp.float32), return_final_state=True)
-        assert states.shape == (10, 96) and xf.shape == (96,)
+        res = ReservoirEngine(p).submit(
+            SubmitSpec(jnp.ones((10, 1), jnp.float32), want_states=True))
+        assert res.states.shape == (10, 96)
+        assert res.final_state.shape == (96,)
+        assert res.output is res.states and res.preds is None
 
 
 class TestChunkedParity:
     """Acceptance: chunked scheduler == one-shot engine, bit for bit."""
 
     @pytest.mark.parametrize("backend", ["xla", "pallas"])
-    @pytest.mark.parametrize("return_states", [True, False])
+    @pytest.mark.parametrize("want_states", [True, False])
     def test_scheduler_bit_identical_to_one_shot(self, backend,
-                                                 return_states):
+                                                 want_states):
         p = _params(mode="fp32")
         eng = ReservoirEngine(p, backend=backend, stats=ServeStats())
         n, t = 4, 24
         reqs = _requests([t] * n, seed=2)
         srv = AsyncReservoirServer(eng, n_slots=n, chunk_steps=8,
-                                   return_states=return_states,
+                                   want_states=want_states,
                                    chunk_time=1.0)
         for r in reqs:
             srv.submit(r, arrival_time=0.0)
         res = srv.run()
         batch = jnp.asarray(np.stack([r.inputs for r in reqs]))
-        one_shot = np.asarray(eng.rollout(batch) if return_states
+        one_shot = np.asarray(eng.rollout(batch) if want_states
                               else eng.predictions(batch))
         for i, r in enumerate(reqs):
-            np.testing.assert_array_equal(res[r.uid], one_shot[i])
+            np.testing.assert_array_equal(res[r.uid].output, one_shot[i])
 
     def test_int8_scheduler_bit_identical(self):
         p = _params(mode="int8-csd")
@@ -115,7 +118,7 @@ class TestChunkedParity:
         batch = jnp.asarray(np.stack([r.inputs for r in reqs]))
         one_shot = np.asarray(eng.predictions(batch))
         for i, r in enumerate(reqs):
-            np.testing.assert_array_equal(res[r.uid], one_shot[i])
+            np.testing.assert_array_equal(res[r.uid].output, one_shot[i])
 
     def test_ragged_lengths_match_per_request_rollout(self):
         """Mixed lengths + mid-chunk retirement: allclose vs the engine's
@@ -131,7 +134,7 @@ class TestChunkedParity:
         res = srv.run()
         for r in reqs:
             want = np.asarray(eng.predictions(jnp.asarray(r.inputs)))
-            np.testing.assert_allclose(res[r.uid], want,
+            np.testing.assert_allclose(res[r.uid].output, want,
                                        rtol=1e-4, atol=1e-6)
 
 
@@ -158,7 +161,7 @@ class TestAdmission:
         _, srv = _server(p, n_slots=2, chunk_steps=8)
         early = srv.submit(_requests([8], seed=6)[0], arrival_time=0.0)
         late = srv.submit(
-            RolloutRequest(uid="late", inputs=np.ones((8, 1), np.float32)),
+            SubmitSpec(np.ones((8, 1), np.float32), uid="late"),
             arrival_time=10.0)
         srv.run()
         assert early.admit_time == 0.0
@@ -172,22 +175,21 @@ class TestAdmission:
         eng = ReservoirEngine(p, stats=ServeStats())
         srv = AsyncReservoirServer(eng, n_slots=2, chunk_steps=8,
                                    chunk_time=1.0)
-        long = srv.submit(RolloutRequest(
-            uid="long", inputs=np.ones((40, 1), np.float32)),
-            arrival_time=0.0)
-        short = srv.submit(RolloutRequest(
-            uid="short", inputs=np.ones((8, 1), np.float32)),
-            arrival_time=0.0)
-        mid = srv.submit(RolloutRequest(
-            uid="mid", inputs=np.full((8, 1), 0.5, np.float32)),
-            arrival_time=1.5)
+        long = srv.submit(SubmitSpec(
+            np.ones((40, 1), np.float32), uid="long"), arrival_time=0.0)
+        short = srv.submit(SubmitSpec(
+            np.ones((8, 1), np.float32), uid="short"), arrival_time=0.0)
+        mid = srv.submit(SubmitSpec(
+            np.full((8, 1), 0.5, np.float32), uid="mid"), arrival_time=1.5)
         res = srv.run()
+        assert short.uid == "short"
         # "mid" was seated after "short" retired, while "long" was live
         assert mid.admit_time > 0.0
         assert mid.admit_time < long.finish_time
         want = np.asarray(eng.predictions(
             jnp.full((8, 1), 0.5, jnp.float32)))
-        np.testing.assert_allclose(res["mid"], want, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(res["mid"].output, want,
+                                   rtol=1e-4, atol=1e-6)
 
     def test_request_x0_seeds_slot_state(self):
         p = _params()
@@ -196,11 +198,11 @@ class TestAdmission:
                                    chunk_time=1.0)
         x0 = np.full((96,), 0.2, np.float32)
         u = np.ones((8, 1), np.float32)
-        srv.submit(RolloutRequest(uid=0, inputs=u, x0=x0))
+        srv.submit(SubmitSpec(u, uid=0, x0=x0))
         res = srv.run()
         want = np.asarray(eng.predictions(
             jnp.asarray(u)[None], x0=jnp.asarray(x0)[None]))[0]
-        np.testing.assert_array_equal(res[0], want)
+        np.testing.assert_array_equal(res[0].output, want)
 
 
 class TestQueueStats:
@@ -210,7 +212,7 @@ class TestQueueStats:
         eng, srv = _server(p, n_slots=1, chunk_steps=8)
         q0 = srv.submit(_requests([8], seed=7)[0], arrival_time=0.0)
         q1 = srv.submit(
-            RolloutRequest(uid=1, inputs=np.ones((8, 1), np.float32)),
+            SubmitSpec(np.ones((8, 1), np.float32), uid=1),
             arrival_time=0.0)
         srv.run()
         s = eng.stats
@@ -264,7 +266,8 @@ class TestQueueStats:
         assert not srv.drained
         res = srv.run()
         assert srv.drained and set(res) == {0}
-        assert res[0].shape == (4, 2)
+        assert res[0].output.shape == (4, 2)
+        assert res[0].timings["latency_s"] > 0.0
 
 
 class TestDeadlines:
@@ -276,10 +279,11 @@ class TestDeadlines:
         eng, srv = _server(p, n_slots=1, chunk_steps=8)
         held = srv.submit(_requests([16], seed=20)[0], arrival_time=0.0)
         doomed = srv.submit(
-            RolloutRequest(uid="doomed", inputs=np.ones((8, 1), np.float32)),
-            arrival_time=0.0, deadline=0.5)
+            SubmitSpec(np.ones((8, 1), np.float32), uid="doomed",
+                       deadline=0.5),
+            arrival_time=0.0)
         patient = srv.submit(
-            RolloutRequest(uid="patient", inputs=np.ones((8, 1), np.float32)),
+            SubmitSpec(np.ones((8, 1), np.float32), uid="patient"),
             arrival_time=0.0)
         res = srv.run()
         assert "doomed" not in res
@@ -307,7 +311,7 @@ class TestDeadlines:
                        deadline=1.5)            # 4 chunks > deadline
         res = srv.run()
         assert q.finish_time == pytest.approx(4.0)
-        assert res[0].shape == (32, 2)
+        assert res[0].output.shape == (32, 2)
 
     def test_all_expired_queue_drains(self):
         """A queue holding only expired requests drains without running
@@ -316,9 +320,9 @@ class TestDeadlines:
         eng, srv = _server(p, n_slots=1, chunk_steps=8)
         srv.submit(_requests([24], seed=23)[0], arrival_time=0.0)
         for i in range(3):
-            srv.submit(RolloutRequest(
-                uid=f"late{i}", inputs=np.ones((8, 1), np.float32)),
-                arrival_time=0.0, deadline=1.0)
+            srv.submit(SubmitSpec(
+                np.ones((8, 1), np.float32), uid=f"late{i}", deadline=1.0),
+                arrival_time=0.0)
         res = srv.run()
         assert set(res) == {0}
         assert eng.stats.timed_out == 3
@@ -374,11 +378,11 @@ class TestRecompilationGuard:
         p = _params()
         eng = ReservoirEngine(p, stats=ServeStats())
         u1 = jnp.zeros((2, 4, 1), jnp.float32)
-        eng.predictions(u1, return_final_state=True)
-        eng.predictions(u1, return_final_state=True)
+        z = jnp.zeros((2, 96), jnp.float32)
+        eng.run_segment(u1, z)
+        eng.run_segment(u1, z)
         assert sum(eng.trace_counts.values()) == 1
-        eng.predictions(jnp.zeros((2, 8, 1), jnp.float32),
-                        return_final_state=True)
+        eng.run_segment(jnp.zeros((2, 8, 1), jnp.float32), z)
         assert sum(eng.trace_counts.values()) == 2
 
 
@@ -431,7 +435,7 @@ class TestZeroCopyServing:
             outs[zero_copy] = srv.run()
         assert set(outs[True]) == set(outs[False])
         for uid in outs[True]:
-            assert (outs[True][uid] == outs[False][uid]).all()
+            assert (outs[True][uid].output == outs[False][uid].output).all()
 
     def test_sharded_server_zero_copy_passthrough(self):
         """The sharded server exposes the same zero_copy knob and serves
@@ -452,7 +456,7 @@ class TestZeroCopyServing:
             outs[zc] = srv.run()
         assert set(outs[True]) == set(outs[False])
         for uid in outs[True]:
-            assert (outs[True][uid] == outs[False][uid]).all()
+            assert (outs[True][uid].output == outs[False][uid].output).all()
 
     def test_shrink_snapshot_survives_host_input_mutation(self):
         """Elastic shrink must carry a sequence's remaining inputs from
@@ -470,12 +474,12 @@ class TestZeroCopyServing:
             srv = DistributedReservoirServer(
                 eng, slots_per_shard=1, chunk_steps=4, chunk_time=1.0,
                 zero_copy=True, stats=ServeStats())
-            srv.submit(RolloutRequest(uid="m", inputs=buf))
+            srv.submit(SubmitSpec(buf, uid="m"))
             srv.step()                          # one chunk consumed
             if mutate:
                 buf[:] = 999.0                  # host buffer is dead
             srv.shrink(0)                       # snapshot + re-admission
-            return srv.run()["m"]
+            return np.asarray(srv.run()["m"].output)
 
         clean = serve(mutate=False)
         mutated = serve(mutate=True)
@@ -555,12 +559,12 @@ class TestServeStatsZeroDivision:
         p = _params()
         eng, srv = _server(p, n_slots=1, chunk_steps=4)
         # one seated request keeps the pool busy while the rest expire
-        srv.submit(RolloutRequest(uid=0, inputs=np.ones((24, 1), np.float32)),
+        srv.submit(SubmitSpec(np.ones((24, 1), np.float32), uid=0),
                    arrival_time=0.0)
         for i in range(3):
-            srv.submit(RolloutRequest(
-                uid=f"late{i}", inputs=np.ones((8, 1), np.float32)),
-                arrival_time=0.0, deadline=0.5)
+            srv.submit(SubmitSpec(
+                np.ones((8, 1), np.float32), uid=f"late{i}", deadline=0.5),
+                arrival_time=0.0)
         res = srv.run()
         assert set(res) == {0}
         st = srv.stats

@@ -203,7 +203,8 @@ class TestServeRequests:
         p = _trained_params(dim=64, block=32, seed=6)
         eng = ReservoirEngine(p)
         req = RolloutRequest(uid="a", inputs=np.ones((7, 1), np.float32))
-        res = eng.serve([req], return_states=True)
+        with pytest.warns(DeprecationWarning, match="want_states"):
+            res = eng.serve([req], return_states=True)
         assert res["a"].shape == (7, 64)
         want = np.asarray(run_reservoir(p, jnp.asarray(req.inputs),
                                         engine="scan"))

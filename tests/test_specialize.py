@@ -229,23 +229,23 @@ class TestSpecializedParity:
         rng = np.random.default_rng(seed)
         t = 8
         u = jnp.asarray(rng.standard_normal((t, batch, 4)), jnp.float32)
-        ref_s, ref_f = base(u, return_states=True, return_final=True)
-        ref_p = base(u, return_states=False, return_preds=True)
+        ref_s, ref_f = base(u, want_states=True, want_final=True)
+        ref_p = base(u, want_states=False, want_preds=True)
         if chunked:
             # two chunks resuming from the carried final state
-            s1, f1 = spec(u[: t // 2], return_states=True, return_final=True)
-            s2, f2 = spec(u[t // 2:], x0=f1, return_states=True,
-                          return_final=True)
+            s1, f1 = spec(u[: t // 2], want_states=True, want_final=True)
+            s2, f2 = spec(u[t // 2:], x0=f1, want_states=True,
+                          want_final=True)
             got_s = jnp.concatenate([s1, s2], axis=0)
             got_f = f2
-            p1, g1 = spec(u[: t // 2], return_states=False,
-                          return_preds=True, return_final=True)
-            p2 = spec(u[t // 2:], x0=g1, return_states=False,
-                      return_preds=True)
+            p1, g1 = spec(u[: t // 2], want_states=False,
+                          want_preds=True, want_final=True)
+            p2 = spec(u[t // 2:], x0=g1, want_states=False,
+                      want_preds=True)
             got_p = jnp.concatenate([p1, p2], axis=0)
         else:
-            got_s, got_f = spec(u, return_states=True, return_final=True)
-            got_p = spec(u, return_states=False, return_preds=True)
+            got_s, got_f = spec(u, want_states=True, want_final=True)
+            got_p = spec(u, want_states=False, want_preds=True)
         assert (np.asarray(ref_s) == np.asarray(got_s)).all()
         assert (np.asarray(ref_f) == np.asarray(got_f)).all()
         assert (np.asarray(ref_p) == np.asarray(got_p)).all()
@@ -263,8 +263,8 @@ class TestSpecializedEpilogues:
                                   w_out=w_out, readout_every=4,
                                   batch_tile_max=4)
         u = jnp.asarray(rng.standard_normal((8, 6, 4)), jnp.float32)
-        ref = base(u, return_states=False, return_preds=True)
-        got = spec(u, return_states=False, return_preds=True)
+        ref = base(u, want_states=False, want_preds=True)
+        got = spec(u, want_states=False, want_preds=True)
         assert ref.shape == got.shape == (2, 6, 4)
         assert (np.asarray(ref) == np.asarray(got)).all()
 
@@ -278,9 +278,10 @@ class TestSpecializedXla:
         assert spec.xla_schedule == "int8-folded-dense"
         rng = np.random.default_rng(2)
         u = jnp.asarray(rng.standard_normal((5, 7, 4)), jnp.float32)
-        for fn in ("rollout", "predictions"):
-            a, fa = getattr(base, fn)(u, return_final_state=True)
-            b, fb = getattr(spec, fn)(u, return_final_state=True)
+        z = jnp.zeros((5, DIM), jnp.float32)
+        for want_states in (True, False):
+            a, fa = base.run_segment(u, z, want_states=want_states)
+            b, fb = spec.run_segment(u, z, want_states=want_states)
             assert (np.asarray(a) == np.asarray(b)).all()
             assert (np.asarray(fa) == np.asarray(fb)).all()
 
