@@ -25,7 +25,7 @@ from jax.experimental.shard_map import shard_map
 from repro.launch.mesh import make_data_mesh
 from repro.parallel.sharding import (batch_spec, data_axis_names,
                                      data_axis_size)
-from repro.plan import DEFAULT_VMEM_BUDGET
+from repro.serve.api import _UNSET
 from repro.serve.engine import (DENSE_DISPATCH_DENSITY, ReservoirEngine,
                                 donated_call)
 from repro.serve.stats import ServeStats
@@ -49,8 +49,10 @@ class ShardedReservoirEngine(ReservoirEngine):
                  backend: str = "auto", interpret: bool = True,
                  stats: ServeStats | None = None,
                  dense_dispatch_density: float = DENSE_DISPATCH_DENSITY,
-                 vmem_budget: int | None = DEFAULT_VMEM_BUDGET,
-                 specialize: bool = True, tenant=None):
+                 vmem_budget: int | None = _UNSET,
+                 specialize: bool = True, tenant=None,
+                 crossover: int | None = None,
+                 batch_tile_max: int | None = None, schedule=None):
         self.mesh = mesh if mesh is not None else make_data_mesh(n_shards)
         assert data_axis_names(self.mesh), \
             f"mesh has no data axes: {self.mesh.axis_names}"
@@ -60,11 +62,16 @@ class ShardedReservoirEngine(ReservoirEngine):
         # kept for elastic rebuilds: shrink() must reconstruct the engine
         # with the same dispatch policy, not the default
         self.dense_dispatch_density = dense_dispatch_density
+        # backend="auto" resolves through the plan autotuner in the base
+        # constructor — the per-shard program IS the single-device program
+        # (shard_map wraps _local_rollout), so the sharded engine inherits
+        # the tuned schedule for free.
         super().__init__(params, backend=backend, interpret=interpret,
                          stats=stats,
                          dense_dispatch_density=dense_dispatch_density,
                          vmem_budget=vmem_budget, specialize=specialize,
-                         tenant=tenant)
+                         tenant=tenant, crossover=crossover,
+                         batch_tile_max=batch_tile_max, schedule=schedule)
         self._sharded_fns: dict = {}
 
     def like(self, params=None, *, mesh=None, stats=None, tenant=None):
@@ -74,15 +81,23 @@ class ShardedReservoirEngine(ReservoirEngine):
         routing (new ``params``, same mesh) both need "the same engine,
         but for X" — mesh-mapped engines are built per server, not
         through the global ``engine_for`` LRU, because the mesh is part
-        of their identity."""
+        of their identity.  Same params carry this engine's resolved
+        schedule verbatim; new params re-resolve through the tuner (a
+        different matrix has its own schedule space), inheriting the
+        tuned-ness rather than this matrix's tuned values."""
+        same = params is None or params is self.params
         return ShardedReservoirEngine(
             self.params if params is None else params,
             mesh=self.mesh if mesh is None else mesh,
-            backend=self.backend, interpret=self.interpret,
+            backend=self.backend if same else self.requested_backend,
+            interpret=self.interpret,
             stats=self.stats if stats is None else stats,
             dense_dispatch_density=self.dense_dispatch_density,
-            vmem_budget=self.vmem_budget, specialize=self.specialize,
-            tenant=tenant)
+            vmem_budget=self.vmem_budget if same else _UNSET,
+            specialize=self.specialize, tenant=tenant,
+            crossover=self.crossover if same else None,
+            batch_tile_max=self.batch_tile_max if same else None,
+            schedule=self.schedule if same else None)
 
     def _sharded(self, with_readout: bool, with_final: bool,
                  donate: bool = False):

@@ -211,6 +211,20 @@ def _partition(plan: ExecutionPlan, col_mm_counts: np.ndarray,
     return "pipelined", tuple((lo, hi) for lo, hi, _n in spans)
 
 
+def _lowerings(plan: ExecutionPlan, mode: str, crossover: int):
+    """Column lowerings cached per ``(mode, crossover)`` on the plan — the
+    expensive half of the analysis (digit-plane folding) is independent of
+    the band budget and batch tile, so the autotuner prices its whole
+    budget x tile candidate grid off one fold per crossover."""
+    cache = getattr(plan, "_lowerings", None)
+    if cache is None:
+        cache = plan._lowerings = {}
+    key = (mode, crossover)
+    if key not in cache:
+        cache[key] = _column_lowerings(plan, mode, crossover)
+    return cache[key]
+
+
 def _analyze(plan: ExecutionPlan, mode: str, crossover: int,
              vmem_budget: int | None) -> dict:
     """The shared schedule analysis both the summary and the full program
@@ -218,7 +232,7 @@ def _analyze(plan: ExecutionPlan, mode: str, crossover: int,
     derived count — ONE set of formulas, so BENCH_specialize.json can
     never drift from what the kernel actually runs.  Materializes no
     tile data."""
-    cols = _column_lowerings(plan, mode, crossover)
+    cols = _lowerings(plan, mode, crossover)
     itemsize = 4 if mode == "fp32" else 1
     tile_bytes = plan.block * plan.block * itemsize
     counts = np.array([sum(len(mm) for _ri, mm, _sa in entries)
@@ -247,7 +261,7 @@ def _analyze(plan: ExecutionPlan, mode: str, crossover: int,
 
 _SUMMARY_KEYS = ("mode", "regime", "n_bands", "n_matmul_terms",
                  "n_shiftadd_terms", "shiftadd_digits", "resident_bytes",
-                 "crossover", "vmem_budget")
+                 "crossover", "vmem_budget", "batch_tile_max")
 
 
 def _summary_dict(src) -> dict:
@@ -258,29 +272,34 @@ def _summary_dict(src) -> dict:
 
 def specialize_summary(plan: ExecutionPlan, mode: str = "fp32",
                        vmem_budget: int | None = DEFAULT_VMEM_BUDGET,
-                       crossover: int | None = None) -> dict:
-    """Counts-level view of the specialization — what ``describe`` reports.
+                       crossover: int | None = None,
+                       batch_tile_max: int = DEFAULT_BATCH_TILE) -> dict:
+    """Counts-level view of the specialization — what ``describe`` reports
+    and what the autotuner prices candidates from.
 
-    Reads the fields off an already-cached :class:`RolloutProgram` when
-    one exists for these parameters (the engine usually built it);
+    Keyed on the FULL schedule tuple ``(mode, vmem_budget, crossover,
+    batch_tile_max)`` — the same key :func:`specialize_rollout` caches
+    programs under, so tuned variants that differ only in batch tiling
+    never collide.  Reads the fields off an already-cached
+    :class:`RolloutProgram` when one exists for exactly these parameters;
     otherwise runs the shared analysis once — never materializing the
-    banded data array — and caches the result on the plan, so repeated
-    ``describe()`` calls don't re-lower anything.  Always returns a
-    fresh dict (callers may annotate it).
+    banded data array — and caches the result on the plan.  Always
+    returns a fresh dict (callers may annotate it).
     """
     assert mode in ("fp32", "int8"), mode
     crossover = default_crossover(plan.block) if crossover is None else crossover
-    key = (mode, vmem_budget, crossover)
-    for (pmode, pbudget, pcross, _btm), prog in getattr(
-            plan, "_programs", {}).items():
-        if (pmode, pbudget, pcross) == key:
-            return _summary_dict(prog)
+    key = (mode, vmem_budget, crossover, batch_tile_max)
+    prog = getattr(plan, "_programs", {}).get(key)
+    if prog is not None:
+        return _summary_dict(prog)
     cache = getattr(plan, "_summaries", None)
     if cache is None:
         cache = plan._summaries = {}
     if key not in cache:
-        cache[key] = _summary_dict(_analyze(plan, mode, crossover,
-                                            vmem_budget))
+        d = _summary_dict(dict(
+            _analyze(plan, mode, crossover, vmem_budget),
+            batch_tile_max=batch_tile_max))
+        cache[key] = d
     return dict(cache[key])
 
 

@@ -40,7 +40,9 @@ import numpy as np
 from repro.core.esn import ESNParams
 from repro.kernels.reservoir_rollout.ops import FusedRollout
 from repro.kernels.reservoir_rollout.specialized import SpecializedRollout
-from repro.plan import DEFAULT_VMEM_BUDGET, plan_for, specialize_rollout
+from repro.plan import (DEFAULT_BATCH_TILE, DEFAULT_VMEM_BUDGET, plan_for,
+                        specialize_rollout)
+from repro.plan.autotune import resolve_backend, resolve_schedule
 from repro.plan.specialize import int8_recur_reference
 from repro.serve.api import _UNSET, RolloutResult, SubmitSpec, warn_deprecated
 from repro.serve.batching import MicroBatch, PaddingBucketer, RolloutRequest
@@ -74,20 +76,48 @@ class ReservoirEngine:
     def __init__(self, params: ESNParams, *, backend: str = "auto",
                  interpret: bool = True, stats: ServeStats | None = None,
                  dense_dispatch_density: float = DENSE_DISPATCH_DENSITY,
-                 vmem_budget: int | None = DEFAULT_VMEM_BUDGET,
-                 specialize: bool = True, tenant: str | None = None):
+                 vmem_budget: int | None = _UNSET,
+                 specialize: bool = True, tenant: str | None = None,
+                 crossover: int | None = None,
+                 batch_tile_max: int | None = None, schedule=None):
         assert backend in ("auto", "xla", "pallas"), backend
         self.params = params
         self.config = params.config
-        self.backend = "xla" if backend == "auto" else backend
         self.stats = stats if stats is not None else ServeStats()
         # registry model name this engine serves (None outside a
         # registry); threads through to the plan-cache tenant counters
         self.tenant = tenant
         self.plan = plan_for(params.w, tenant=tenant)
-        self.vmem_budget = vmem_budget
         self.specialize = specialize
         self._int8 = self.config.mode.startswith("int8")
+        # backend="auto" resolves through the plan autotuner: a persisted
+        # tuning cache replays the measured winner, a cold cache falls
+        # back to the analytic cost model's pick — never a hardcoded
+        # backend.  The tuned schedule fills every knob the caller left
+        # unset; explicit kwargs always win (a caller pinning the budget
+        # keeps it).  ``schedule`` accepts a Schedule or TunedSchedule to
+        # bypass resolution entirely (the bench harness injects measured
+        # winners this way).
+        self.requested_backend = backend
+        if schedule is None and backend == "auto" and specialize:
+            schedule = resolve_schedule(
+                self.plan, "int8" if self._int8 else "fp32")
+        sched = getattr(schedule, "schedule", schedule)
+        self.schedule = sched
+        if sched is not None:
+            self.backend = sched.backend if backend == "auto" else backend
+            if vmem_budget is _UNSET:
+                vmem_budget = sched.vmem_budget
+            if crossover is None:
+                crossover = sched.crossover
+            if batch_tile_max is None:
+                batch_tile_max = sched.batch_tile_max
+        else:
+            self.backend = "xla" if backend == "auto" else backend
+        self.vmem_budget = DEFAULT_VMEM_BUDGET if vmem_budget is _UNSET \
+            else vmem_budget
+        self.crossover = crossover
+        self.batch_tile_max = batch_tile_max
         # Readout captured at construction; engine_for invalidates the
         # cached engine when params.w_out is replaced (fit_readout).
         self._w_out = params.w_out
@@ -105,12 +135,19 @@ class ReservoirEngine:
         # (N chunks must trace once per shape/regime, never per chunk)
         self._xla_traces: collections.Counter = collections.Counter()
         if self.backend == "pallas":
+            kw = {}
+            if specialize:
+                # the schedule knobs are a specialization concept; the
+                # generic banded FusedRollout has no crossover/tiling
+                kw = {"crossover": self.crossover,
+                      "batch_tile_max": self.batch_tile_max
+                      or DEFAULT_BATCH_TILE}
             cls = SpecializedRollout if specialize else FusedRollout
             self._fused = cls(
                 self.plan, params.w_in, leak=self.config.leak,
                 mode="int8" if self._int8 else "fp32",
                 state_bits=self.config.state_bits, interpret=interpret,
-                w_out=self._w_out, vmem_budget=vmem_budget)
+                w_out=self._w_out, vmem_budget=self.vmem_budget, **kw)
         else:
             # jitted rollouts keyed on (with_readout, with_final, donated);
             # built lazily except the plain states path every caller hits
@@ -154,7 +191,10 @@ class ReservoirEngine:
             program = None
             if int8 and self.specialize and not self._int8_dense:
                 program = specialize_rollout(
-                    plan, "int8", vmem_budget=self.vmem_budget)
+                    plan, "int8", vmem_budget=self.vmem_budget,
+                    crossover=self.crossover,
+                    batch_tile_max=self.batch_tile_max
+                    or DEFAULT_BATCH_TILE)
         schedule = self.xla_schedule
 
         def rollout(u_bt: jnp.ndarray, x0: jnp.ndarray) -> jnp.ndarray:
@@ -609,8 +649,22 @@ def engine_for(params: ESNParams, backend: str = "auto", *,
     engine holds its params (and compiled programs) alive until it is
     evicted or ``engine_cache_clear()`` runs — the cache trades bounded
     pinning for compile reuse.
+
+    ``backend="auto"`` keys the cache on the backend the plan autotuner
+    resolves for these params — the SAME resolution the constructor runs,
+    so the cache key and the built engine's backend always agree (resolution
+    is deterministic and cached on the plan; it used to be hardcoded
+    ``"xla"`` for the key while the constructor got the raw string).
     """
-    bk = "xla" if backend == "auto" else backend
+    if backend != "auto":
+        bk = backend
+    elif kwargs.get("schedule") is not None:
+        sched = kwargs["schedule"]
+        bk = getattr(sched, "schedule", sched).backend
+    elif not kwargs.get("specialize", True):
+        bk = "xla"  # unspecialized engines have no schedule space to tune
+    else:
+        bk = resolve_backend(params, backend)
     if tenant is None:
         key = (id(params), bk)
         ent = _engine_cache.get(key)
