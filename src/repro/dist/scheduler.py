@@ -24,6 +24,7 @@ import heapq
 
 import numpy as np
 
+from repro import obs
 from repro.dist.engine import ShardedReservoirEngine
 from repro.launch.mesh import make_data_mesh
 from repro.runtime.elastic import shrink_serve_plan
@@ -267,4 +268,8 @@ class DistributedReservoirServer(AsyncReservoirServer):
         plan["n_shards_before"] = plan["survivors"] + failed
         plan["n_shards_after"] = new_n
         plan["readmitted"] = len(carried)
+        obs.event("shrink", failed=failed, n_shards_after=new_n,
+                  readmitted=len(carried))
+        obs.inc("shrinks_total")
+        obs.set_gauge("n_shards", new_n)
         return plan

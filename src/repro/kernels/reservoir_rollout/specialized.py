@@ -47,6 +47,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs
 from repro.core.sparse import FixedMatrix
 from repro.plan import (DEFAULT_BATCH_TILE, DEFAULT_VMEM_BUDGET,
                         ExecutionPlan, plan_for, specialize_rollout)
@@ -332,9 +333,15 @@ class SpecializedRollout:
                 # trace-time side effect: one tick per compiled program
                 # (donate is part of the key — a donated variant is a
                 # distinct program, not a recompile)
-                me.trace_counts[(u_seq.shape, want_states, want_preds,
-                                 want_final, donate,
-                                 program.regime)] += 1
+                tkey = (u_seq.shape, want_states, want_preds,
+                        want_final, donate, program.regime)
+                me.trace_counts[tkey] += 1
+                n = me.trace_counts[tkey]
+                obs.event("pallas_trace" if n == 1 else "retrace",
+                          backend="pallas", shape=str(u_seq.shape),
+                          regime=program.regime, count=n)
+                obs.inc("retrace_total" if n > 1
+                        else "compile_traces_total", backend="pallas")
                 # batch/lane padding AND output trimming live inside the
                 # jit: the caller's (B, dim) carried-state buffer is the
                 # donated argument itself, and the trimmed (B, dim) final

@@ -39,6 +39,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import costmodel
 from repro.plan.plan import DEFAULT_VMEM_BUDGET, ExecutionPlan
 from repro.plan.specialize import DEFAULT_BATCH_TILE, default_crossover, \
@@ -448,6 +449,9 @@ def resolve_schedule(plan: ExecutionPlan, mode: str, *,
                                   or tuned.measured_s is not None
                                   or not measure):
             _pin_to_plan(plan, mode, batch, hw, tuned)
+            obs.event("schedule_resolve", source=tuned.source, mode=mode,
+                      schedule=tuned.schedule.describe())
+            obs.inc("schedule_cache_requests_total", outcome="hit")
             return tuned
     model = _default_model() if model is None else model
     cands = candidate_schedules(plan, mode, backends)
@@ -472,7 +476,11 @@ def resolve_schedule(plan: ExecutionPlan, mode: str, *,
             chosen.append((default_pred, default))
         trials = []
         for pred, s in chosen:
+            t0 = time.perf_counter()
             meas = _measure_schedule(plan, s, params, batch, steps, reps)
+            obs.span("autotune.trial", t0, time.perf_counter(),
+                     clock="wall", schedule=s.describe(),
+                     predicted_s=pred, measured_s=meas)
             trials.append((s, pred, meas))
         win_sched, win_pred, win_meas = min(
             trials, key=lambda t: (t[2], t[0].sort_key()))
@@ -487,6 +495,9 @@ def resolve_schedule(plan: ExecutionPlan, mode: str, *,
             trials=tuple((s.as_dict(), p, m) for s, p, m in trials))
     cache.put(key, tuned)
     _pin_to_plan(plan, mode, batch, hw, tuned)
+    obs.event("schedule_resolve", source=tuned.source, mode=mode,
+              schedule=tuned.schedule.describe())
+    obs.inc("schedule_cache_requests_total", outcome="miss")
     return tuned
 
 

@@ -32,6 +32,7 @@ import functools
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import costmodel
 from repro.core.sparse import BlockSparse, FixedMatrix
 
@@ -508,9 +509,14 @@ def plan_for(fm: FixedMatrix, tenant: str | None = None) -> ExecutionPlan:
     plan = getattr(fm, "_execution_plan", None)
     hit = plan is not None and plan._fm is fm
     if not hit:
-        plan = ExecutionPlan(fm)
+        with obs.timed_span("plan.lower", tenant=tenant):
+            plan = ExecutionPlan(fm)
         fm._execution_plan = plan
+        obs.event("plan_lowering", shape=str(fm.shape), tenant=tenant)
     _PLAN_CACHE_STATS["hits" if hit else "misses"] += 1
+    obs.inc("plan_cache_requests_total",
+            outcome="hit" if hit else "miss",
+            **({} if tenant is None else {"tenant": tenant}))
     if tenant is not None:
         tenants = _PLAN_CACHE_STATS["tenants"]
         c = tenants.setdefault(tenant, {"hits": 0, "misses": 0})

@@ -38,6 +38,7 @@ to the generic banded kernel in every regime (property-tested).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -323,6 +324,8 @@ def specialize_rollout(plan: ExecutionPlan, mode: str = "fp32",
     if key in cache:
         return cache[key]
 
+    from repro import obs
+    t_spec = time.perf_counter()
     bk = plan.block
     dtype = np.float32 if mode == "fp32" else np.int8
     a = _analyze(plan, mode, crossover, vmem_budget)
@@ -358,6 +361,9 @@ def specialize_rollout(plan: ExecutionPlan, mode: str = "fp32",
         shiftadd_digits=a["shiftadd_digits"],
         resident_bytes=a["resident_bytes"])
     cache[key] = program
+    obs.span("plan.specialize", t_spec, time.perf_counter(), clock="wall",
+             mode=mode, regime=a["regime"], n_bands=a["n_bands"])
+    obs.event("specialize", mode=mode, regime=a["regime"])
     return program
 
 

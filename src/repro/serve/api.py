@@ -68,6 +68,10 @@ class SubmitSpec:
       (default): predictions when the serving engine has a trained
       readout, states otherwise.
     * ``uid``          — result key; servers assign ``req<N>`` when None.
+    * ``trace_id``     — observability correlation id threaded through
+      every span this request touches and echoed in
+      ``RolloutResult.timings``; when ``None`` and tracing is enabled
+      (``repro.obs.configure()``), servers assign one at submit.
     """
 
     inputs: Any
@@ -77,6 +81,7 @@ class SubmitSpec:
     deadline: float | None = None
     want_states: bool | None = None
     uid: Any | None = None
+    trace_id: str | None = None
 
     @property
     def length(self) -> int:
@@ -92,10 +97,37 @@ class RolloutResult:
     one-shot engine paths (the carry a chunked caller resumes from
     bit-identically); scheduler paths answer ``None`` — a pooled chunk
     rolls past a retiring sequence's real length, so the pool row is not
-    x(T).  ``timings`` is a plain mutable dict: engines record
-    ``seconds``; servers record the request lifecycle (``arrival_time``,
-    ``admit_time``, ``finish_time``, ``queue_wait_s``, ``ttfp_s``,
-    ``latency_s``) plus ``model``/``version`` when routed by a registry.
+    x(T).
+
+    ``timings`` is a plain mutable dict following ONE schema on every
+    path (one-shot engine calls and queued scheduler serving alike —
+    built by :func:`lifecycle_timings`).  All times are seconds on the
+    path's serving clock: ``time.perf_counter`` for direct engine calls,
+    the server's virtual clock for scheduled requests.
+
+    Always present:
+
+    * ``arrival_time``      — when the request entered the system (a
+      direct engine call "arrives" when it is made);
+    * ``admit_time``        — when work started (equals ``arrival_time``
+      on direct calls: there is no queue to wait in);
+    * ``finish_time``       — when the result was complete;
+    * ``first_output_time`` — when the first chunk of output was ready
+      (equals ``finish_time`` on one-shot calls);
+    * ``queue_wait_s``      — ``admit_time - arrival_time``;
+    * ``ttfp_s``            — ``first_output_time - arrival_time``
+      (time to first prediction);
+    * ``latency_s``         — ``finish_time - arrival_time``;
+    * ``seconds``           — time spent actually serving: the fused
+      rollout wall time on engine paths, ``finish_time - admit_time``
+      (slot residency) on scheduler paths.
+
+    Present when applicable:
+
+    * ``model`` / ``version`` — the registry tenant and pinned version a
+      routed request was served by;
+    * ``trace_id``           — the observability correlation id (set
+      when ``repro.obs`` tracing is enabled or the spec carried one).
     """
 
     preds: Any | None = None
@@ -110,4 +142,41 @@ class RolloutResult:
         return self.states if self.preds is None else self.preds
 
 
-__all__ = ["SubmitSpec", "RolloutResult", "warn_deprecated", "_UNSET"]
+def lifecycle_timings(*, arrival_time: float, admit_time: float,
+                      finish_time: float,
+                      first_output_time: float | None = None,
+                      seconds: float | None = None,
+                      model: str | None = None,
+                      version: int | None = None,
+                      trace_id: str | None = None) -> dict:
+    """Build the one documented ``RolloutResult.timings`` schema.
+
+    Every serve path calls this so the key set can never drift between
+    the one-shot engine paths and the scheduler paths (see
+    :class:`RolloutResult` for the key meanings).  ``first_output_time``
+    defaults to ``finish_time`` (one-shot: the whole output lands at
+    once); ``seconds`` defaults to ``finish_time - admit_time``.
+    """
+    if first_output_time is None:
+        first_output_time = finish_time
+    t = {
+        "arrival_time": arrival_time,
+        "admit_time": admit_time,
+        "first_output_time": first_output_time,
+        "finish_time": finish_time,
+        "queue_wait_s": admit_time - arrival_time,
+        "ttfp_s": first_output_time - arrival_time,
+        "latency_s": finish_time - arrival_time,
+        "seconds": (finish_time - admit_time if seconds is None
+                    else seconds),
+    }
+    if model is not None:
+        t["model"] = model
+        t["version"] = version
+    if trace_id is not None:
+        t["trace_id"] = trace_id
+    return t
+
+
+__all__ = ["SubmitSpec", "RolloutResult", "lifecycle_timings",
+           "warn_deprecated", "_UNSET"]

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.esn import ESNParams
 from repro.kernels.reservoir_rollout.ops import FusedRollout
 from repro.kernels.reservoir_rollout.specialized import SpecializedRollout
@@ -44,7 +45,8 @@ from repro.plan import (DEFAULT_BATCH_TILE, DEFAULT_VMEM_BUDGET, plan_for,
                         specialize_rollout)
 from repro.plan.autotune import resolve_backend, resolve_schedule
 from repro.plan.specialize import int8_recur_reference
-from repro.serve.api import _UNSET, RolloutResult, SubmitSpec, warn_deprecated
+from repro.serve.api import (_UNSET, RolloutResult, SubmitSpec,
+                             lifecycle_timings, warn_deprecated)
 from repro.serve.batching import MicroBatch, PaddingBucketer, RolloutRequest
 from repro.serve.stats import ServeStats
 
@@ -134,6 +136,9 @@ class ReservoirEngine:
         # trace-time tick per compiled rollout: the recompilation guard
         # (N chunks must trace once per shape/regime, never per chunk)
         self._xla_traces: collections.Counter = collections.Counter()
+        obs.event("engine_build", backend=self.backend, tenant=tenant,
+                  schedule=str(self.schedule))
+        obs.inc("engine_builds_total", backend=self.backend)
         if self.backend == "pallas":
             kw = {}
             if specialize:
@@ -201,8 +206,14 @@ class ReservoirEngine:
             # trace-time side effect: the recompilation-guard counter
             # (donate is part of the key — the donated variant is a
             # legitimately distinct program, not a recompile)
-            traces[(u_bt.shape, with_readout, with_final, donate,
-                    schedule)] += 1
+            key = (u_bt.shape, with_readout, with_final, donate, schedule)
+            traces[key] += 1
+            n = traces[key]
+            obs.event("xla_trace" if n == 1 else "retrace",
+                      backend="xla", shape=str(u_bt.shape),
+                      schedule=schedule, count=n)
+            obs.inc("retrace_total" if n > 1 else "compile_traces_total",
+                    backend="xla")
             # One gemm projects every input of every step before the scan.
             uproj = u_bt.astype(jnp.float32) @ w_in          # (B, T, R)
             uproj_t = jnp.swapaxes(uproj, 0, 1)              # (T, B, R)
@@ -340,9 +351,18 @@ class ReservoirEngine:
             # device->host wait lands at slot retirement), so the call is
             # flagged in the stats and throughput should be read from the
             # scheduler's makespan clock, not ServeStats.seconds.
+            seconds = time.perf_counter() - t0
             self.stats.record_call(batch=batch, steps=steps,
-                                   seconds=time.perf_counter() - t0,
+                                   seconds=seconds,
                                    real_steps=real_steps, deferred=defer)
+            # deferred calls timed dispatch only; synced calls include the
+            # device wait — two different span names so the trace never
+            # conflates the two measurements.
+            obs.span("engine.dispatch" if defer else "engine.rollout",
+                     t0, t0 + seconds, backend=self.backend,
+                     batch=batch, steps=steps, deferred=defer)
+            obs.observe("engine_rollout_seconds", seconds,
+                        backend=self.backend)
         return out
 
     def _resolve_want(self, want_states: bool | None) -> bool:
@@ -397,15 +417,23 @@ class ReservoirEngine:
         want = self._resolve_want(spec.want_states)
         u, x0b, single = self._prepare(spec.inputs, spec.x0)
         b, t, _ = u.shape
+        trace_id = spec.trace_id or obs.new_trace_id()
         t0 = time.perf_counter()
         out, xf = self._dispatch(u, x0b, not want, True, False)
         self._record(out, b, t, t0, None)
-        seconds = time.perf_counter() - t0
+        finish = time.perf_counter()
+        obs.span("request.serve", t0, finish, trace_id=trace_id,
+                 clock="wall", batch=b, steps=t)
+        obs.observe("request_latency_seconds", finish - t0, path="engine")
         if single:
             out, xf = out[0], xf[0]
         return RolloutResult(preds=None if want else out,
                              states=out if want else None,
-                             final_state=xf, timings={"seconds": seconds})
+                             final_state=xf,
+                             timings=lifecycle_timings(
+                                 arrival_time=t0, admit_time=t0,
+                                 finish_time=finish, seconds=finish - t0,
+                                 trace_id=trace_id))
 
     def submit_many(self, specs: Sequence[SubmitSpec],
                     bucketer: PaddingBucketer | None = None) -> dict:
@@ -422,6 +450,7 @@ class ReservoirEngine:
         """
         bucketer = bucketer or PaddingBucketer()
         groups: dict[bool, list] = {}
+        tids: dict = {}
         for i, spec in enumerate(specs):
             if spec.model is not None:
                 raise ValueError(
@@ -429,11 +458,13 @@ class ReservoirEngine:
                     "a registry-backed server")
             want = self._resolve_want(spec.want_states)
             uid = spec.uid if spec.uid is not None else f"req{i}"
+            tids[uid] = spec.trace_id or obs.new_trace_id()
             groups.setdefault(want, []).append(
                 RolloutRequest(uid=uid, inputs=np.asarray(spec.inputs),
                                x0=spec.x0))
         results: dict = {}
         dim = self.config.reservoir_dim
+        arrival = time.perf_counter()
         for want, reqs in groups.items():
             for mb in bucketer.group(reqs):
                 u = jnp.asarray(mb.inputs)
@@ -443,13 +474,22 @@ class ReservoirEngine:
                 t0 = time.perf_counter()
                 out, _xf = self._dispatch(u, x0b, not want, True, False)
                 self._record(out, b, t, t0, mb.real_steps)
-                seconds = time.perf_counter() - t0
+                finish = time.perf_counter()
+                seconds = finish - t0
                 for j, req in enumerate(mb.requests):
                     row = out[j, :req.length]
+                    tid = tids[req.uid]
+                    obs.span("request.serve", t0, finish, trace_id=tid,
+                             clock="wall", batch=b, steps=t)
+                    obs.observe("request_latency_seconds", finish - arrival,
+                                path="engine")
                     results[req.uid] = RolloutResult(
                         preds=None if want else row,
                         states=row if want else None,
-                        timings={"seconds": seconds})
+                        timings=lifecycle_timings(
+                            arrival_time=arrival, admit_time=t0,
+                            finish_time=finish, seconds=seconds,
+                            trace_id=tid))
         return results
 
     # -- deprecated boolean-twin shims (one release) -------------------------
@@ -615,6 +655,8 @@ def _cache_put(key: tuple, eng: "ReservoirEngine", sig: tuple) -> None:
         _engine_cache.popitem(last=False)
         _engine_cache_stats["evictions"] += 1
     _engine_cache_stats["misses"] += 1
+    obs.event("engine_cache_miss", key=str(key))
+    obs.inc("engine_cache_requests_total", outcome="miss")
 
 
 def _params_stale(eng: "ReservoirEngine", params: ESNParams) -> bool:
@@ -677,6 +719,7 @@ def engine_for(params: ESNParams, backend: str = "auto", *,
         else:
             _engine_cache.move_to_end(key)
             _engine_cache_stats["hits"] += 1
+            obs.inc("engine_cache_requests_total", outcome="hit")
         return eng
 
     name = tenant[0] if isinstance(tenant, tuple) else tenant
@@ -695,6 +738,7 @@ def engine_for(params: ESNParams, backend: str = "auto", *,
         _engine_cache.move_to_end(key)
         _engine_cache_stats["hits"] += 1
         counters["hits"] += 1
+        obs.inc("engine_cache_requests_total", outcome="hit", tenant=name)
         return ent[0]
     if build is not None:
         eng = build(params, backend=backend, **kwargs)

@@ -27,6 +27,7 @@ import dataclasses
 import time
 from typing import Any, Callable
 
+from repro import obs
 from repro.serve.api import SubmitSpec
 from repro.serve.engine import engine_cache_demote, engine_for
 from repro.runtime.elastic import swap_serve_plan
@@ -207,6 +208,11 @@ class ModelRegistry:
         self._active[name] = mv.version
         if old is not None and old != mv.version:
             engine_cache_demote((name, old))
+        obs.event("publish", model=name, old_version=old,
+                  new_version=mv.version, prewarm_s=prewarm_s)
+        obs.inc("publishes_total", model=name)
+        obs.span("registry.publish", t0, t0 + prewarm_s, clock="wall",
+                 model=name, version=mv.version)
         plan = swap_serve_plan(name, old, mv.version)
         plan["prewarm_s"] = prewarm_s
         return plan

@@ -41,7 +41,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.api import _UNSET, RolloutResult, SubmitSpec, warn_deprecated
+from repro import obs
+from repro.serve.api import (_UNSET, RolloutResult, SubmitSpec,
+                             lifecycle_timings, warn_deprecated)
 from repro.serve.batching import RolloutRequest
 from repro.serve.stats import ServeStats
 
@@ -82,6 +84,8 @@ class QueuedRequest:
     #                                      (None = the pool's default)
     as_result: bool = False              # SubmitSpec submission: answer a
     #                                      RolloutResult, not a bare array
+    trace_id: str | None = None          # observability correlation id
+    #                                      (threads through every span)
 
     @property
     def uid(self) -> Any:
@@ -274,6 +278,13 @@ class ContinuousBatcher:
         the sharded batcher overrides this with least-loaded-shard
         admission."""
         return self._slots.index(None)
+
+    def shard_of(self, slot: int) -> int | None:
+        """Which device shard ``slot`` maps to — ``None`` on the
+        single-device pool.  Subclass hook: the sharded batcher answers
+        the real shard index, and the observability layer uses it to
+        label per-shard queue-wait/latency series."""
+        return None
 
     def admit(self, qreq: QueuedRequest) -> int:
         """Seat a request in a free slot (zero state, or its ``x0``).
@@ -642,17 +653,23 @@ class AsyncReservoirServer:
                 arrival_time=at, seq=self._seq,
                 deadline=None if dl is None else float(dl),
                 model=spec.model, want_states=spec.want_states,
-                as_result=True)
+                as_result=True,
+                trace_id=spec.trace_id or obs.new_trace_id())
         else:
             warn_deprecated(
                 "submit(RolloutRequest, ...) is deprecated; submit a "
                 "SubmitSpec (results become RolloutResult — read .output)")
             qreq = QueuedRequest(request, arrival_time=at, seq=self._seq,
                                  deadline=None if deadline is None
-                                 else float(deadline))
+                                 else float(deadline),
+                                 trace_id=obs.new_trace_id())
         self._seq += 1
         heapq.heappush(self._queue, (at, qreq.seq, qreq))
         self.stats.record_enqueue()
+        obs.inc("requests_submitted_total",
+                **({} if qreq.model is None else {"model": qreq.model}))
+        obs.span("request.enqueue", at, trace_id=qreq.trace_id,
+                 clock="server", uid=str(qreq.uid), model=qreq.model)
         ts = self._tstats(qreq.model)
         if ts is not None:
             ts.record_enqueue()
@@ -687,6 +704,12 @@ class AsyncReservoirServer:
                 # nobody is waiting for anymore
                 heapq.heappop(self._queue)
                 self.stats.record_timeout()
+                obs.inc("requests_timed_out_total",
+                        **({} if qreq.model is None
+                           else {"model": qreq.model}))
+                obs.span("request.timeout", self.now,
+                         trace_id=qreq.trace_id, clock="server",
+                         uid=str(qreq.uid))
                 ts = self._tstats(qreq.model)
                 if ts is not None:
                     ts.record_timeout()
@@ -699,43 +722,66 @@ class AsyncReservoirServer:
                 # FIFO key) for the next sweep
                 held.append(heapq.heappop(self._queue))
                 self.stats.record_quota_hold()
+                obs.inc("quota_holds_total",
+                        **({} if qreq.model is None
+                           else {"model": qreq.model}))
                 ts = self._tstats(qreq.model)
                 if ts is not None:
                     ts.record_quota_hold()
                 continue
             heapq.heappop(self._queue)
             qreq.admit_time = self.now
+            slot = self.batcher.admit(qreq)
             if qreq.requeued:
                 qreq.requeued = False
             else:
-                self.stats.record_admission(self.now - qreq.arrival_time)
+                wait = self.now - qreq.arrival_time
+                self.stats.record_admission(wait)
+                obs.observe("queue_wait_seconds", wait,
+                            **self._obs_labels(qreq, slot))
+                obs.span("request.queued", qreq.arrival_time, self.now,
+                         trace_id=qreq.trace_id, clock="server",
+                         uid=str(qreq.uid), slot=slot)
                 ts = self._tstats(qreq.model)
                 if ts is not None:
-                    ts.record_admission(self.now - qreq.arrival_time)
-            self.batcher.admit(qreq)
+                    ts.record_admission(wait)
         for entry in held:
             heapq.heappush(self._queue, entry)
 
     # -- results -------------------------------------------------------------
+    def _obs_labels(self, qreq: QueuedRequest, slot: int | None) -> dict:
+        """Metric labels for one request: tenant when routed, shard when
+        the pool is sharded (nothing otherwise — unlabeled series merge
+        naturally)."""
+        labels: dict = {}
+        if qreq.model is not None:
+            labels["model"] = qreq.model
+        if slot is not None:
+            shard = self.batcher.shard_of(slot)
+            if shard is not None:
+                labels["shard"] = shard
+        return labels
+
     def _package(self, qreq: QueuedRequest, out) -> Any:
         """Raw array for legacy RolloutRequest submissions, RolloutResult
-        for specs."""
+        for specs.  Timings follow the one documented schema
+        (:func:`~repro.serve.api.lifecycle_timings`): ``first_output_time``
+        comes straight off the request's lifecycle mark — including marks
+        from chunks long before retirement — with retirement as the
+        one-chunk-request fallback."""
         if not qreq.as_result:
             return out
         want = self.batcher._want_of(qreq)
-        timings = {
-            "arrival_time": qreq.arrival_time,
-            "admit_time": qreq.admit_time,
-            "finish_time": qreq.finish_time,
-            "queue_wait_s": qreq.admit_time - qreq.arrival_time,
-            "latency_s": qreq.finish_time - qreq.arrival_time,
-        }
-        if qreq.model is not None:
-            timings["model"] = qreq.model
-            timings["version"] = qreq.pinned_version
         return RolloutResult(preds=None if want else out,
                              states=out if want else None,
-                             timings=timings)
+                             timings=lifecycle_timings(
+                                 arrival_time=qreq.arrival_time,
+                                 admit_time=qreq.admit_time,
+                                 finish_time=qreq.finish_time,
+                                 first_output_time=qreq.first_output_time,
+                                 model=qreq.model,
+                                 version=qreq.pinned_version,
+                                 trace_id=qreq.trace_id))
 
     # -- event loop ----------------------------------------------------------
     def step(self) -> bool:
@@ -751,17 +797,35 @@ class AsyncReservoirServer:
             # left): no chunk to run this step
             return not self.drained
         t0 = time.perf_counter()
+        chunk_start = self.now
         retired, real_steps = self.batcher.run_chunk()
-        self.now += (time.perf_counter() - t0 if self.chunk_time is None
-                     else self.chunk_time)
+        wall = time.perf_counter() - t0
+        self.now += wall if self.chunk_time is None else self.chunk_time
         self.stats.record_chunk(
             live_steps=real_steps,
             total_steps=self.batcher.n_slots * self.batcher.chunk_steps)
+        obs.span("scheduler.chunk", chunk_start, self.now, clock="server",
+                 live_steps=real_steps, retired=len(retired))
+        obs.observe("chunk_seconds", wall)
+        # per-slot shard labels for this chunk's retirees (run_chunk
+        # already freed their slots, so read its per-chunk view)
+        retired_slot = dict(zip((q.uid for q, _ in retired),
+                                self.batcher.last_retired_slots))
+        slot_of = {q.uid: i for i, q in enumerate(self.batcher._slots)
+                   if q is not None}
+        slot_of.update(retired_slot)
         for qreq, out in retired:
             qreq.finish_time = self.now
             latency = self.now - qreq.arrival_time
             self.results[qreq.uid] = self._package(qreq, out)
             self.stats.record_completion(latency)
+            labels = self._obs_labels(qreq, slot_of.get(qreq.uid))
+            obs.observe("request_latency_seconds", latency,
+                        path="scheduler", **labels)
+            obs.inc("requests_completed_total", **labels)
+            obs.span("request.serve", qreq.admit_time, self.now,
+                     trace_id=qreq.trace_id, clock="server",
+                     uid=str(qreq.uid), **labels)
             ts = self._tstats(qreq.model)
             if ts is not None:
                 ts.record_completion(latency)
@@ -773,6 +837,11 @@ class AsyncReservoirServer:
                 qreq.first_output_time = self.now
                 ttfp = self.now - qreq.arrival_time
                 self.stats.record_first_output(ttfp)
+                labels = self._obs_labels(qreq, slot_of.get(qreq.uid))
+                obs.observe("ttfp_seconds", ttfp, **labels)
+                obs.span("request.first_output", self.now,
+                         trace_id=qreq.trace_id, clock="server",
+                         uid=str(qreq.uid))
                 ts = self._tstats(qreq.model)
                 if ts is not None:
                     ts.record_first_output(ttfp)

@@ -260,8 +260,10 @@ class ServeStats:
                      f"{s['max_queue_wait_ms']:.2f} ms max, "
                      f"ttfp {s['mean_ttfp_ms']:.2f} ms mean, "
                      f"occupancy {s['slot_occupancy']:.0%}")
-            if self.timed_out:
-                line += f", {self.timed_out} timed out"
+            # drops and holds are SLO facts: always rendered (zero
+            # included), so a dashboard line never hides them
+            line += f", {self.timed_out} timed out"
+            line += f", {self.quota_held} quota held"
         if self.shards is not None:
             for label, p in self.shards.items():
                 line += (f"\n  {label}: {p.admitted} admitted, "

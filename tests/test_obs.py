@@ -1,0 +1,324 @@
+"""Observability layer: metrics, tracing, events, serve integration.
+
+Load-bearing properties:
+
+* **Merge exactness** — fixed-bucket histogram counts are additive, so
+  merging per-shard histograms yields *identical* percentiles to one
+  histogram fed the union of the samples (property-tested).  This is what
+  makes the distributed server's merged p50/p99/p999 export honest rather
+  than an approximation-of-approximations.
+* **One timings schema** — the one-shot engine path and the queued
+  scheduler path answer ``RolloutResult.timings`` with the same
+  documented key set (:func:`repro.serve.api.lifecycle_timings`).
+* **Zero steady-state retraces** — rolling many chunks of one shape
+  emits compile events once and ``retrace`` events never.
+* **Off by default** — without ``obs.configure()`` every instrumented
+  site is a no-op and results carry no trace ids.
+"""
+
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import obs
+from repro.core.esn import ESNConfig, fit_readout, init_esn, run_reservoir
+from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, HistogramData,
+                               MetricsRegistry)
+from repro.serve import (AsyncReservoirServer, ReservoirEngine, ServeStats,
+                         SubmitSpec)
+
+import jax.numpy as jnp
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    """Every test starts and ends with instrumentation off."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+def _params(dim=96, seed=1, block=32):
+    cfg = ESNConfig(reservoir_dim=dim, element_sparsity=0.8, leak=0.7,
+                    seed=seed, block=block, output_dim=2)
+    p = init_esn(cfg)
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.standard_normal((50, 1)), jnp.float32)
+    states = run_reservoir(p, u, engine="scan")
+    y = jnp.concatenate([u, jnp.roll(u, 1)], axis=-1)
+    return fit_readout(p, states, y, lam=1e-2)
+
+
+def _serve(n=6, **server_kw):
+    eng = ReservoirEngine(_params(), backend="xla", stats=ServeStats())
+    server_kw.setdefault("chunk_time", 1.0)
+    srv = AsyncReservoirServer(eng, n_slots=4, chunk_steps=8, **server_kw)
+    rng = np.random.default_rng(0)
+    for i in range(n):
+        srv.submit(SubmitSpec(
+            rng.standard_normal((10 + 3 * i, 1)).astype(np.float32), uid=i),
+            arrival_time=0.1 * i)
+    return eng, srv, srv.run()
+
+
+# -- histograms --------------------------------------------------------------
+class TestHistogramMerge:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 200), st.integers(2, 5), st.integers(0, 10_000))
+    def test_merged_percentiles_equal_union(self, n, shards, seed):
+        """THE merge property: per-shard histograms merged == one
+        histogram fed the union, for every percentile — exactly."""
+        rng = np.random.default_rng(seed)
+        samples = rng.lognormal(mean=-6.0, sigma=3.0, size=n)
+        parts = [HistogramData(buckets=DEFAULT_LATENCY_BUCKETS)
+                 for _ in range(shards)]
+        union = HistogramData(buckets=DEFAULT_LATENCY_BUCKETS)
+        for i, v in enumerate(samples):
+            parts[i % shards].observe(float(v))
+            union.observe(float(v))
+        merged = HistogramData.merge(parts)
+        assert merged.total == union.total == n
+        assert merged.counts == union.counts
+        assert merged.sum == pytest.approx(union.sum)
+        for p in (0.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0):
+            assert merged.percentile(p) == union.percentile(p)
+
+    def test_percentile_is_bucket_upper_bound(self):
+        h = HistogramData(buckets=(1.0, 2.0, 4.0))
+        for v in (0.5, 1.5, 1.7, 3.0):
+            h.observe(v)
+        assert h.percentile(50) == 2.0            # rank 2 lands in (1, 2]
+        assert h.percentile(100) == 4.0
+        h.observe(100.0)                          # overflow bucket
+        assert h.percentile(100) == 100.0         # vmax, not +inf
+        assert HistogramData(buckets=(1.0,)).percentile(99) == 0.0
+
+    def test_merge_rejects_mismatched_buckets(self):
+        a = HistogramData(buckets=(1.0, 2.0))
+        b = HistogramData(buckets=(1.0, 3.0))
+        with pytest.raises(AssertionError):
+            HistogramData.merge([a, b])
+
+    def test_stats_and_metrics_agree_on_counts(self):
+        """ServeStats.merge and a merged metrics histogram count the same
+        events when fed the same completions."""
+        waits = [[0.01, 0.2, 0.5], [0.003, 0.9]]
+        stats_parts, hist_parts = [], []
+        for shard in waits:
+            s = ServeStats()
+            h = HistogramData(buckets=DEFAULT_LATENCY_BUCKETS)
+            for w in shard:
+                s.record_enqueue()
+                s.record_admission(w)
+                h.observe(w)
+            stats_parts.append(s)
+            hist_parts.append(h)
+        merged_stats = ServeStats.merge(stats_parts)
+        merged_hist = HistogramData.merge(hist_parts)
+        assert merged_stats.admitted == merged_hist.total == 5
+        assert merged_stats.queue_wait_s == pytest.approx(merged_hist.sum)
+
+
+# -- registry export ---------------------------------------------------------
+class TestMetricsRegistry:
+    def _populated(self):
+        m = MetricsRegistry(namespace="repro")
+        m.inc("requests_total", 3, model="a")
+        m.inc("requests_total", 1, model="b")
+        m.set("n_shards", 4)
+        rng = np.random.default_rng(0)
+        for v in rng.lognormal(-5, 2, size=50):
+            m.observe("queue_wait_seconds", float(v))
+        return m
+
+    def test_prometheus_text_shape(self):
+        text = self._populated().prometheus_text()
+        assert '# TYPE repro_requests_total counter' in text
+        assert 'repro_requests_total{model="a"} 3' in text
+        assert '# TYPE repro_n_shards gauge' in text
+        assert '# TYPE repro_queue_wait_seconds histogram' in text
+        assert 'le="+Inf"' in text
+        assert 'repro_queue_wait_seconds_count 50' in text
+        # cumulative buckets end at the total count
+        lines = [l for l in text.splitlines() if "_bucket" in l]
+        assert lines[-1].endswith(" 50")
+
+    def test_json_roundtrip_preserves_percentiles(self):
+        m = self._populated()
+        m2 = MetricsRegistry.from_json(json.loads(json.dumps(m.to_json())))
+        h, h2 = m.histogram("queue_wait_seconds"), \
+            m2.histogram("queue_wait_seconds")
+        for p in (50, 99, 99.9):
+            assert h.percentile(p) == h2.percentile(p)
+        assert m2.counter("requests_total").value(model="a") == 3
+        assert m2.prometheus_text() == m.prometheus_text()
+
+
+# -- serve integration -------------------------------------------------------
+class TestServeObservability:
+    def test_percentiles_exported_from_async_server(self):
+        obs.configure()
+        _eng, _srv, results = _serve()
+        m = obs.metrics()
+        qw = m.histogram("queue_wait_seconds")
+        ttfp = m.histogram("ttfp_seconds")
+        lat = m.histogram("request_latency_seconds")
+        assert qw.count() == 6 and ttfp.count() == 6 and lat.count() == 6
+        for h in (qw, ttfp, lat):
+            for p in (50, 99, 99.9):
+                assert h.percentile(p) > 0.0
+        text = m.prometheus_text()
+        assert "repro_queue_wait_seconds_bucket" in text
+        assert "repro_ttfp_seconds_count 6" in text
+
+    def test_one_timings_schema_on_both_paths(self):
+        """Engine one-shot and scheduler paths answer the same documented
+        key set — including first_output/ttfp on multi-chunk requests."""
+        obs.configure()
+        eng, _srv, results = _serve()
+        rng = np.random.default_rng(1)
+        one = eng.submit(SubmitSpec(
+            rng.standard_normal((12, 1)).astype(np.float32)))
+        base = {"arrival_time", "admit_time", "first_output_time",
+                "finish_time", "queue_wait_s", "ttfp_s", "latency_s",
+                "seconds"}
+        assert base | {"trace_id"} == set(one.timings)
+        for res in results.values():
+            assert base | {"trace_id"} == set(res.timings)
+            t = res.timings
+            assert t["queue_wait_s"] == pytest.approx(
+                t["admit_time"] - t["arrival_time"])
+            assert t["ttfp_s"] == pytest.approx(
+                t["first_output_time"] - t["arrival_time"])
+            assert t["latency_s"] == pytest.approx(
+                t["finish_time"] - t["arrival_time"])
+            assert (t["arrival_time"] <= t["admit_time"]
+                    <= t["first_output_time"] <= t["finish_time"])
+
+    def test_first_output_precedes_finish_on_long_requests(self):
+        """Regression: a request whose first output landed chunks before
+        retirement reports that mark, not its finish time."""
+        obs.configure()
+        eng = ReservoirEngine(_params(), backend="xla", stats=ServeStats())
+        srv = AsyncReservoirServer(eng, n_slots=2, chunk_steps=4,
+                                   chunk_time=1.0)
+        rng = np.random.default_rng(2)
+        srv.submit(SubmitSpec(
+            rng.standard_normal((20, 1)).astype(np.float32), uid="long"))
+        res = srv.run()["long"]
+        t = res.timings
+        assert t["first_output_time"] < t["finish_time"]
+        assert t["ttfp_s"] < t["latency_s"]
+
+    def test_trace_id_threads_through_lifecycle(self):
+        obs.configure()
+        _eng, _srv, results = _serve(n=3)
+        tr = obs.tracer()
+        for res in results.values():
+            tid = res.timings["trace_id"]
+            names = [s.name for s in tr.spans(trace_id=tid)]
+            assert "request.enqueue" in names
+            assert "request.queued" in names
+            assert "request.serve" in names
+            assert all(s.clock == "server"
+                       for s in tr.spans(trace_id=tid))
+
+    def test_explicit_trace_id_wins(self):
+        obs.configure()
+        eng = ReservoirEngine(_params(), backend="xla", stats=ServeStats())
+        res = eng.submit(SubmitSpec(
+            np.zeros((4, 1), np.float32), trace_id="mine"))
+        assert res.timings["trace_id"] == "mine"
+        assert obs.tracer().spans(trace_id="mine")
+
+    def test_flight_recorder_jsonl_export(self, tmp_path):
+        obs.configure()
+        _serve(n=3)
+        path = tmp_path / "trace.jsonl"
+        n = obs.tracer().export_jsonl(path)
+        lines = path.read_text().splitlines()
+        assert len(lines) == n > 0
+        rec = json.loads(lines[0])
+        assert {"name", "start", "end", "duration_s", "clock"} <= set(rec)
+
+    def test_zero_steady_state_retraces(self):
+        """Compile events fire once per program; rolling many chunks of
+        one pool shape must never emit a retrace."""
+        obs.configure()
+        _serve(n=8)
+        ev = obs.events()
+        assert ev.count("retrace") == 0
+        assert ev.count("xla_trace") >= 1
+        # warmed steady-state window: drain, serve more, still zero
+        ev.drain()
+        _serve(n=4)
+        assert not [e for e in ev.events() if e.kind == "retrace"]
+
+    def test_disabled_is_noop(self):
+        assert not obs.enabled()
+        eng, _srv, results = _serve(n=2)
+        for res in results.values():
+            assert "trace_id" not in res.timings
+            assert "seconds" in res.timings
+        assert obs.metrics() is None and obs.tracer() is None
+
+
+# -- stats render ------------------------------------------------------------
+class TestStatsRender:
+    def test_render_surfaces_timed_out_and_quota_held(self):
+        s = ServeStats()
+        s.record_enqueue()
+        s.record_admission(0.1)
+        s.record_chunk(live_steps=4, total_steps=8)
+        s.record_completion(0.5)
+        s.record_timeout()
+        s.record_quota_hold()
+        s.record_quota_hold()
+        line = s.render()
+        assert "1 timed out" in line
+        assert "2 quota held" in line
+
+    def test_render_shows_zeros_not_silence(self):
+        s = ServeStats()
+        s.record_enqueue()
+        s.record_admission(0.0)
+        s.record_chunk(live_steps=1, total_steps=1)
+        line = s.render()
+        assert "0 timed out" in line
+        assert "0 quota held" in line
+
+
+# -- dist: merged shard export ----------------------------------------------
+class TestDistObservability:
+    def test_sharded_server_merged_percentiles(self):
+        """Queue-wait/ttfp percentiles export from the distributed server
+        with per-shard labels merging into one exact histogram."""
+        from repro.dist import (DistributedReservoirServer,
+                                ShardedReservoirEngine)
+        obs.configure()
+        eng = ShardedReservoirEngine(_params(), n_shards=1, backend="xla",
+                                     stats=ServeStats())
+        srv = DistributedReservoirServer(eng, slots_per_shard=3,
+                                         chunk_steps=8, chunk_time=1.0)
+        rng = np.random.default_rng(3)
+        for i in range(5):
+            srv.submit(SubmitSpec(
+                rng.standard_normal((10, 1)).astype(np.float32), uid=i),
+                arrival_time=0.1 * i)
+        srv.run()
+        m = obs.metrics()
+        qw = m.histogram("queue_wait_seconds")
+        assert qw.count() == 5
+        # per-shard series carry a shard label; the unlabeled view is the
+        # exact merge of every shard's series
+        shard_total = 0
+        for key, data in qw.series.items():
+            assert any(k == "shard" for k, _v in key)
+            shard_total += data.total
+        assert shard_total == 5
+        for p in (50, 99, 99.9):
+            assert qw.percentile(p) > 0.0
+        assert m.histogram("ttfp_seconds").count() == 5
