@@ -39,6 +39,7 @@ SPECIALIZE_OUT = "BENCH_specialize.json"  # regime-selection stats artifact
 AUTOTUNE_CACHE_OUT = "AUTOTUNE_cache.json"  # measured schedule winners
 AUTOTUNE_CALIB_OUT = "AUTOTUNE_calibration.json"  # refit cost coefficients
 OBS_OUT = "BENCH_obs.json"        # observability overhead gate artifact
+SUSTAINED_OUT = "BENCH_sustained.json"  # sustained-load SLO gate artifact
 OBS_PROM_OUT = "OBS_metrics.prom"    # Prometheus scrape payload artifact
 OBS_JSON_OUT = "OBS_metrics.json"    # JSON metrics snapshot artifact
 OBS_TRACE_OUT = "OBS_trace.jsonl"    # request-trace flight recorder dump
@@ -1163,6 +1164,61 @@ def serve_registry():
     })
 
 
+def serve_sustained():
+    """Sustained-load SLO harness: long traces, faults, and hard gates.
+
+    Drives the serving stack with Poisson / bursty / overload traces on
+    the virtual clock (plus a chaos trace with an injected shard death
+    under 8 virtual devices) and records the SLO surface — p50/p99/p999
+    latency from the obs histograms, shed rate, recovery time — and the
+    gate verdicts CI asserts: zero lost admitted requests, bounded p99
+    under overload with backpressure on (vs a diverging unbounded
+    baseline), and bit-exactness of every completed request against the
+    undisturbed reference.  Details live in ``benchmarks/sustained.py``;
+    the full payload lands in ``BENCH_sustained.json``.
+    """
+    import jax
+
+    try:
+        from benchmarks import sustained
+    except ModuleNotFoundError:  # script mode: sys.path[0] is benchmarks/
+        import sustained
+
+    rows = sustained.measure_local(FAST)
+    if len(jax.devices()) >= 8:
+        rows.extend(sustained.measure_chaos(FAST))
+    else:
+        # same respawn dance as serve_sharded: forcing 8 virtual devices
+        # in-process would re-partition the CPU under every other family
+        import os
+        import pathlib
+        import subprocess
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                            + env.get("XLA_FLAGS", "")).strip()
+        cmd = [sys.executable, "-m", "benchmarks.sustained",
+               "--chaos-child"]
+        if FAST:
+            cmd.append("--fast")
+        out = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=1200, env=env,
+            cwd=str(pathlib.Path(__file__).resolve().parent.parent))
+        assert out.returncode == 0, out.stderr[-3000:]
+        payload = out.stdout.split("SUSTAINED_JSON\n", 1)[1]
+        rows.extend(json.loads(payload))
+    gate = sustained.gates(rows)
+    with open(SUSTAINED_OUT, "w") as fh:
+        json.dump({"benchmark": "serve_sustained", "fast_mode": FAST,
+                   "rows": rows, "gates": gate}, fh, indent=2)
+    print(f"# wrote {SUSTAINED_OUT} ({len(rows)} rows)", file=sys.stderr)
+    for r in rows:
+        emit(f"serve_sustained/{r['scenario']}",
+             r["latency_p99_s"] * 1e6,
+             f"completed={r['completed']}/{r['submitted']};"
+             f"shed_rate={r['shed_rate']:.2f};lost={r['lost_admitted']}")
+    SERVE_RESULTS.extend(rows)
+
+
 def serve_plan_stats():
     """ExecutionPlan compile stats: what the shared lowering kept/culled.
 
@@ -1230,6 +1286,12 @@ def _flush_serve_json():
                               "tenant p99 vs single-tenant on one pool, "
                               "and publish() live-swap cost behind "
                               "running traffic",
+            "serve_sustained": "sustained-load SLO harness: Poisson / "
+                               "bursty / overload / chaos traces with "
+                               "injected faults, gated on zero lost "
+                               "admitted requests, bounded p99 under "
+                               "backpressure, and bit-exact recovery "
+                               "(details in BENCH_sustained.json)",
             "serve_obs": "observability overhead: fully instrumented "
                          "(metrics + tracing + event log) vs "
                          "uninstrumented continuous serving, gated at "
@@ -1262,7 +1324,8 @@ ALL = [fig05_bit_sparsity, fig06_element_vs_bit_sparse, fig07_matrix_size,
        fig17_18_batching, fig19_20_sigma_dim, fig21_22_sigma_sparsity,
        fig23_sigma_batching, esn_quality, kernel_walltimes, serve_rollout,
        serve_readout, serve_queue, serve_sharded, serve_specialized,
-       serve_autotune, serve_registry, serve_obs, serve_plan_stats]
+       serve_autotune, serve_registry, serve_obs, serve_sustained,
+       serve_plan_stats]
 
 
 def main(argv=None) -> None:

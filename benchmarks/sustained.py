@@ -1,0 +1,420 @@
+"""Sustained-load SLO harness: long traces, faults, and hard gates.
+
+The production-hardening acceptance run (ROADMAP 4d): drive the serving
+stack with long arrival traces on the deterministic virtual clock —
+steady Poisson, bursty, overload, and a chaos trace with an injected
+fault schedule — and report the SLO surface:
+
+* p50 / p99 / p999 request latency and queue wait, read back from the
+  obs histograms the servers already feed (the same fixed-bucket
+  series production scrapes);
+* shed / rejection rate under the admission policy;
+* recovery time after an injected shard death (chaos trace, 8 virtual
+  devices: loss -> shrink -> autoscale grow-back);
+* the three hard gates CI asserts on a shortened trace:
+
+  1. **zero lost admitted requests** — every request that entered the
+     queue is either completed or an accounted timeout, through
+     transients, stragglers, and shard death (``lost == 0``);
+  2. **bounded p99 under overload with backpressure on** — a bounded
+     queue caps queue wait at ~``max_depth`` chunk times, while the
+     same trace without admission control diverges (p99 grows with
+     the trace length, not the pool);
+  3. **bit-exactness under chaos** — every completed request's output
+     equals the undisturbed no-fault run of the same admitted set,
+     bit for bit.
+
+Standalone: ``python -m benchmarks.sustained [--fast]`` writes
+``BENCH_sustained.json``; the ``serve_sustained`` family in
+``benchmarks/run.py`` embeds the same measurements in the bench suite
+(the chaos trace respawns under 8 virtual host devices there).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")  # allow `python -m benchmarks.sustained`
+
+SUSTAINED_OUT = "BENCH_sustained.json"
+
+# pool geometry shared by every scenario (chunk cost is measured, the
+# clock is virtual, so the geometry — not the host — sets the SLOs)
+N_SLOTS = 8
+CHUNK_STEPS = 16
+MAX_DEPTH = 16          # BoundedQueuePolicy depth for the overload gate
+
+
+def _params(dim, seed=0, out_dim=4):
+    """Frozen reservoir sized for trace runs (4-dim inputs, fixed
+    readout; no spectral rescale — it doesn't affect scheduling)."""
+    import jax.numpy as jnp
+    from repro.core.esn import ESNConfig, ESNParams
+    from repro.core.sparse import FixedMatrix, random_sparse_matrix
+    rng = np.random.default_rng(seed)
+    w = random_sparse_matrix(dim, dim, 0.9, rng) * 0.05
+    fm = FixedMatrix.compile(w, weight_bits=8, mode="csd", block=128,
+                             rng=rng)
+    cfg = ESNConfig(reservoir_dim=dim, input_dim=4, mode="fp32", block=128,
+                    seed=seed)
+    w_in = jnp.asarray(rng.uniform(-0.5, 0.5, (4, dim)), jnp.float32)
+    w_out = jnp.asarray(rng.uniform(-0.1, 0.1, (dim, out_dim)), jnp.float32)
+    return ESNParams(w=fm, w_in=w_in, w_out=w_out, config=cfg)
+
+
+def _trace(n_req, mean_gap, seed, *, bursty=False, deadline_frac=0.0,
+           deadline_budget=0.0):
+    """A reproducible arrival trace: specs + arrival times (+deadlines).
+
+    ``bursty`` clusters arrivals in bursts of 8 separated by quiet gaps
+    of the same total mass, so the instantaneous rate swings ~8x around
+    the same mean.
+    """
+    from repro.serve import SubmitSpec
+    rng = np.random.default_rng(seed)
+    lengths = rng.integers(8, 65, n_req)
+    if bursty:
+        n_bursts = max(1, n_req // 8)
+        starts = np.cumsum(rng.exponential(8 * mean_gap, n_bursts))
+        at = np.sort(rng.choice(starts, n_req)
+                     + rng.exponential(0.1 * mean_gap, n_req))
+        at -= at[0]
+    else:
+        gaps = rng.exponential(mean_gap, n_req)
+        at = np.cumsum(gaps) - gaps[0]
+    specs = []
+    for i, t in enumerate(lengths):
+        dl = None
+        if deadline_frac and rng.random() < deadline_frac:
+            dl = float(at[i]) + deadline_budget
+        specs.append(SubmitSpec(
+            rng.standard_normal((int(t), 4)).astype(np.float32),
+            uid=i, deadline=dl))
+    return specs, at, int(lengths.sum())
+
+
+def _measure_chunk_time(params, dim):
+    """One pool chunk's measured cost — the virtual clock's tick."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import ReservoirEngine
+    eng = ReservoirEngine(params, backend="xla")
+    u = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (N_SLOTS, CHUNK_STEPS, 4)), jnp.float32)
+    x0 = jnp.zeros((N_SLOTS, dim), jnp.float32)
+    jax.block_until_ready(eng.run_segment(u, x0)[0])      # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jax.block_until_ready(eng.run_segment(u, x0)[0])
+    return (time.perf_counter() - t0) / 3
+
+
+def _percentiles(name="request_latency_seconds"):
+    from repro import obs
+    fam = obs.metrics().get(name)
+    if fam is None:
+        return {"p50": 0.0, "p99": 0.0, "p999": 0.0}
+    d = fam.data()
+    return {"p50": d.percentile(50.0), "p99": d.percentile(99.0),
+            "p999": d.percentile(99.9)}
+
+
+def _drive(srv, specs, arrivals):
+    """Play the trace against the virtual clock: a request is submitted
+    when the clock reaches its arrival time, so admission policies see
+    the queue as it actually is at that instant — submitting the whole
+    future up front would count unarrived requests as backlog and shed
+    the lot."""
+    i, n = 0, len(specs)
+    while i < n or not srv.drained:
+        while i < n and (arrivals[i] <= srv.now or srv.drained):
+            # drained + future arrival: submit it and let the server
+            # fast-forward its clock to the arrival
+            srv.submit(specs[i], arrival_time=float(arrivals[i]))
+            i += 1
+        srv.step()
+    return srv.results
+
+
+def _replay_reference(params, admitted_specs, arrivals_by_uid, chunk_time):
+    """The undisturbed reference: the same admitted set on a plain
+    server — no admission policy, no fault plan — at the same pool
+    shape.  Pool rows never mix, so every completed request must match
+    this run bit for bit."""
+    from repro.serve import (AsyncReservoirServer, ReservoirEngine,
+                             ServeStats, SubmitSpec)
+    import dataclasses
+    eng = ReservoirEngine(params, backend="xla", stats=ServeStats())
+    srv = AsyncReservoirServer(eng, n_slots=N_SLOTS,
+                               chunk_steps=CHUNK_STEPS,
+                               chunk_time=chunk_time, stats=ServeStats())
+    for spec in admitted_specs:
+        # deadlines off: the reference answers "what are the right bits",
+        # not "would it have been dropped"
+        srv.submit(dataclasses.replace(spec, deadline=None),
+                   arrival_time=arrivals_by_uid[spec.uid])
+    return srv.run()
+
+
+def _bitexact(results, reference):
+    """Every completed request matches the reference bit for bit."""
+    checked = 0
+    for uid, res in results.items():
+        if getattr(res, "status", "ok") != "ok":
+            continue
+        ref = reference[uid]
+        if not np.array_equal(np.asarray(res.output),
+                              np.asarray(ref.output)):
+            return False, checked
+        checked += 1
+    return True, checked
+
+
+def _row(scenario, srv, n_req, total_steps, chunk_time, **extra):
+    st = srv.stats
+    submitted = st.enqueued + st.rejected + st.shed
+    lost = st.enqueued - st.completed - st.timed_out
+    lat = _percentiles("request_latency_seconds")
+    wait = _percentiles("queue_wait_seconds")
+    return {
+        "family": "serve_sustained", "scenario": scenario,
+        "mode": "fp32", "backend": "xla",
+        "n_slots": N_SLOTS, "chunk_steps": CHUNK_STEPS,
+        "chunk_time_s": chunk_time,
+        "requests": n_req, "total_steps": total_steps,
+        "submitted": submitted, "admitted": st.enqueued,
+        "completed": st.completed, "timed_out": st.timed_out,
+        "rejected": st.rejected, "shed": st.shed, "retries": st.retries,
+        "lost_admitted": lost,
+        "shed_rate": (st.rejected + st.shed) / submitted if submitted
+        else 0.0,
+        "makespan_s": srv.now,
+        "latency_p50_s": lat["p50"], "latency_p99_s": lat["p99"],
+        "latency_p999_s": lat["p999"],
+        "queue_wait_p99_s": wait["p99"],
+        **extra,
+    }
+
+
+def measure_local(fast: bool) -> list:
+    """The single-device scenarios: poisson, bursty(+faults), overload
+    with backpressure on vs off."""
+    from repro import obs
+    from repro.runtime.faults import FaultPlan
+    from repro.serve import (AsyncReservoirServer, BoundedQueuePolicy,
+                             ReservoirEngine, ServeStats, default_policy)
+
+    dim = 256 if fast else 512
+    n_req = 48 if fast else 160
+    params = _params(dim, seed=5)
+    t_chunk = _measure_chunk_time(params, dim)
+    # service rate of the pool in steps/s; mean request is ~36 steps
+    service = N_SLOTS * CHUNK_STEPS / t_chunk
+    mean_len = 36.0
+
+    def server(admission=None, fault_plan=None):
+        eng = ReservoirEngine(params, backend="xla", stats=ServeStats())
+        return AsyncReservoirServer(
+            eng, n_slots=N_SLOTS, chunk_steps=CHUNK_STEPS,
+            chunk_time=t_chunk, stats=ServeStats(),
+            admission=admission, fault_plan=fault_plan)
+
+    rows = []
+
+    # -- poisson @ ~80% utilisation: the steady-state SLO baseline ------
+    obs.configure(tracing=False)
+    try:
+        specs, at, steps = _trace(n_req, mean_len / (0.8 * service), seed=21,
+                                  deadline_frac=0.25,
+                                  deadline_budget=50 * t_chunk)
+        srv = server(admission=default_policy(max_depth=4 * N_SLOTS))
+        res = _drive(srv, specs, at)
+        admitted = [s for s in specs
+                    if getattr(res.get(s.uid), "status", "ok") != "rejected"]
+        ref = _replay_reference(params, admitted,
+                                dict(zip([s.uid for s in specs], at)),
+                                t_chunk)
+        exact, checked = _bitexact(res, ref)
+        rows.append(_row("poisson", srv, n_req, steps, t_chunk,
+                         utilization=0.8, bitexact=exact,
+                         bitexact_checked=checked))
+    finally:
+        obs.disable()
+
+    # -- bursty arrivals + seeded transient/straggler faults ------------
+    obs.configure(tracing=False)
+    try:
+        specs, at, steps = _trace(n_req, mean_len / (0.8 * service), seed=22,
+                                  bursty=True)
+        horizon = float(at[-1]) + 20 * t_chunk
+        plan = FaultPlan.seeded(7, horizon=horizon,
+                                transient_rate=2.0 / horizon * 5,
+                                slow_rate=1.0 / horizon * 3,
+                                slow_factor=3.0,
+                                slow_duration=5 * t_chunk,
+                                backoff_base_s=t_chunk / 64)
+        srv = server(admission=default_policy(max_depth=4 * N_SLOTS),
+                     fault_plan=plan)
+        res = _drive(srv, specs, at)
+        admitted = [s for s in specs
+                    if getattr(res.get(s.uid), "status", "ok") != "rejected"]
+        ref = _replay_reference(params, admitted,
+                                dict(zip([s.uid for s in specs], at)),
+                                t_chunk)
+        exact, checked = _bitexact(res, ref)
+        rows.append(_row("bursty_faults", srv, n_req, steps, t_chunk,
+                         utilization=0.8, bitexact=exact,
+                         bitexact_checked=checked,
+                         faults_injected=dict(plan.injected)))
+    finally:
+        obs.disable()
+
+    # -- overload @ ~3x: backpressure on vs off -------------------------
+    # longer trace than the steady scenarios: the unbounded queue's p99
+    # grows with the trace, the bounded one must not — the gap IS the gate
+    over_n = 2 * n_req
+    for label, admission in (("overload_backpressure",
+                              BoundedQueuePolicy(max_depth=MAX_DEPTH)),
+                             ("overload_unbounded", None)):
+        obs.configure(tracing=False)
+        try:
+            specs, at, steps = _trace(over_n, mean_len / (3.0 * service),
+                                      seed=23)
+            srv = server(admission=admission)
+            _drive(srv, specs, at)
+            rows.append(_row(label, srv, over_n, steps, t_chunk,
+                             utilization=3.0,
+                             max_depth=MAX_DEPTH if admission else None))
+        finally:
+            obs.disable()
+    return rows
+
+
+def measure_chaos(fast: bool) -> list:
+    """The chaos trace: 8 virtual devices, sharded server, one injected
+    shard death mid-trace, seeded transients, autoscale grow-back.
+    Reports recovery time (loss -> pool width restored) and the
+    bit-exactness verdict vs the undisturbed 4-shard run."""
+    import jax
+    from repro import obs
+    from repro.dist import DistributedReservoirServer, ShardedReservoirEngine
+    from repro.runtime.elastic import AutoscalePolicy
+    from repro.runtime.faults import FaultPlan
+    from repro.serve import ServeStats
+
+    assert len(jax.devices()) >= 8, "chaos trace needs 8 devices"
+    dim = 256
+    n_req = 48 if fast else 120
+    sps = 2                     # slots_per_shard >= 2: bit-identity regime
+    n_shards = 4
+    params = _params(dim, seed=6)
+    t_chunk = 1.0               # device-parallel virtual clock
+    specs, at, steps = _trace(n_req, 36.0 / (0.8 * n_shards * sps
+                                             * CHUNK_STEPS / t_chunk),
+                              seed=31)
+    loss_at = float(at[-1]) * 0.3
+    horizon = float(at[-1]) + 40 * t_chunk
+
+    def serve(disturb):
+        plan = None
+        autoscale = None
+        if disturb:
+            plan = FaultPlan.seeded(11, horizon=horizon,
+                                    transient_rate=3.0 / horizon,
+                                    shard_loss_times=[loss_at],
+                                    backoff_base_s=t_chunk / 64)
+            autoscale = AutoscalePolicy(min_shards=1, max_shards=n_shards,
+                                        cooldown_steps=2)
+        eng = ShardedReservoirEngine(params, n_shards=n_shards,
+                                     stats=ServeStats())
+        srv = DistributedReservoirServer(
+            eng, slots_per_shard=sps, chunk_steps=CHUNK_STEPS,
+            chunk_time=t_chunk, stats=ServeStats(), fault_plan=plan,
+            autoscale=autoscale)
+        for spec, t in zip(specs, at):
+            srv.submit(spec, arrival_time=float(t))
+        widths = []
+        while srv.step():
+            widths.append((srv.now, srv.n_shards))
+        return srv.results, srv, plan, widths
+
+    obs.configure(tracing=False)
+    try:
+        res, srv, plan, widths = serve(disturb=True)
+        ref, ref_srv, _, _ = serve(disturb=False)
+        exact, checked = _bitexact(res, ref)
+        loss_t = plan.fault_times.get("shard_loss", [loss_at])[0]
+        restored = [t for t, w in widths if t > loss_t and w >= n_shards]
+        recovery = (restored[0] - loss_t) if restored else None
+        return [_row("chaos", srv, n_req, steps, t_chunk,
+                     n_shards=n_shards, slots_per_shard=sps,
+                     reshards=srv.reshards, grows=srv.grows,
+                     readmitted=srv.readmitted,
+                     shard_loss_at_s=loss_t,
+                     recovery_time_s=recovery,
+                     bitexact=exact, bitexact_checked=checked,
+                     faults_injected=dict(plan.injected))]
+    finally:
+        obs.disable()
+
+
+def gates(rows: list) -> dict:
+    """The CI gate summary: every value here is asserted by the
+    workflow's serve_sustained step."""
+    by = {r["scenario"]: r for r in rows}
+    bp = by.get("overload_backpressure")
+    ub = by.get("overload_unbounded")
+    out = {
+        "zero_lost_admitted": all(r["lost_admitted"] == 0 for r in rows),
+        "bitexact_all": all(r.get("bitexact", True) for r in rows),
+    }
+    if bp and ub:
+        # the bounded queue caps wait at ~max_depth + in-pool chunks;
+        # the unbounded queue's p99 grows with the whole trace
+        bound = (MAX_DEPTH + 3 * N_SLOTS) * bp["chunk_time_s"]
+        out["overload_p99_bounded"] = bp["latency_p99_s"] <= bound
+        out["overload_p99_bound_s"] = bound
+        out["overload_p99_with_s"] = bp["latency_p99_s"]
+        out["overload_p99_without_s"] = ub["latency_p99_s"]
+        out["overload_backpressure_wins"] = (
+            bp["latency_p99_s"] < ub["latency_p99_s"])
+        out["overload_sheds"] = bp["rejected"] + bp["shed"] > 0
+    chaos = by.get("chaos")
+    if chaos:
+        out["chaos_recovered"] = (chaos.get("recovery_time_s") is not None
+                                  and chaos["grows"] >= 1)
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json-out", default=SUSTAINED_OUT)
+    ap.add_argument("--chaos-child", action="store_true",
+                    help=argparse.SUPPRESS)  # respawned under 8 devices
+    args = ap.parse_args(argv)
+    if args.chaos_child:
+        rows = measure_chaos(args.fast)
+        print("SUSTAINED_JSON")
+        print(json.dumps(rows))
+        return
+    rows = measure_local(args.fast)
+    import jax
+    if len(jax.devices()) >= 8:
+        rows.extend(measure_chaos(args.fast))
+    payload = {"benchmark": "serve_sustained", "fast_mode": args.fast,
+               "rows": rows, "gates": gates(rows)}
+    with open(args.json_out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"# wrote {args.json_out} ({len(rows)} rows)", file=sys.stderr)
+    print(json.dumps(payload["gates"], indent=2))
+
+
+if __name__ == "__main__":
+    main()

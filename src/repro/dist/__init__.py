@@ -11,7 +11,11 @@ zero collectives in the rollout hot loop:
 - ``scheduler`` — :class:`ShardedContinuousBatcher` (per-shard slot
   sub-pools, least-loaded admission off one global FIFO) and
   :class:`DistributedReservoirServer` (merged + per-shard telemetry,
-  elastic :meth:`~DistributedReservoirServer.shrink` on shard loss)
+  elastic :meth:`~DistributedReservoirServer.shrink` on shard loss and
+  :meth:`~DistributedReservoirServer.grow` under live traffic, driven
+  manually or by a :class:`~repro.runtime.elastic.AutoscalePolicy`;
+  fault-plan driven shard-death detection recovers through the same
+  shrink path with zero request loss)
 """
 
 from repro.dist.engine import ShardedReservoirEngine  # noqa: F401

@@ -22,12 +22,13 @@ from __future__ import annotations
 import dataclasses
 import heapq
 
+import jax
 import numpy as np
 
 from repro import obs
 from repro.dist.engine import ShardedReservoirEngine
 from repro.launch.mesh import make_data_mesh
-from repro.runtime.elastic import shrink_serve_plan
+from repro.runtime.elastic import grow_serve_plan, shrink_serve_plan
 from repro.serve.api import _UNSET, RolloutResult, warn_deprecated
 from repro.serve.batching import RolloutRequest
 from repro.serve.scheduler import AsyncReservoirServer, ContinuousBatcher
@@ -137,7 +138,8 @@ class DistributedReservoirServer(AsyncReservoirServer):
                  stats: ServeStats | None = None,
                  chunk_time: float | None = None,
                  zero_copy: bool | None = None,
-                 registry=None):
+                 registry=None, admission=None, fault_plan=None,
+                 autoscale=None):
         if return_states is not _UNSET:
             warn_deprecated(
                 "DistributedReservoirServer(return_states=...) is "
@@ -153,8 +155,14 @@ class DistributedReservoirServer(AsyncReservoirServer):
             chunk_steps=chunk_steps, want_states=want_states,
             zero_copy=zero_copy)
         super().__init__(engine, stats=stats, chunk_time=chunk_time,
-                         batcher=batcher, registry=registry)
+                         batcher=batcher, registry=registry,
+                         admission=admission, fault_plan=fault_plan)
+        # elastic autoscaling: an AutoscalePolicy consulted once per step
+        # (None = manual grow()/shrink() only)
+        self.autoscale = autoscale
+        self._autoscale_cooldown = 0
         self.reshards = 0                 # completed shrink operations
+        self.grows = 0                    # completed grow operations
         self.readmitted = 0               # in-flight seqs carried across
         self._prefixes: dict = {}         # uid -> chunks produced pre-shrink
         self._shard_epochs: list = []     # pre-shrink batchers' shard stats
@@ -195,6 +203,8 @@ class DistributedReservoirServer(AsyncReservoirServer):
         return ServeStats.merge(parts, labels)
 
     def step(self) -> bool:
+        if self.autoscale is not None:
+            self._maybe_autoscale()
         alive = super().step()
         # a sequence resumed across a shrink retires with only its
         # post-shrink output; prepend the snapshotted prefix chunks
@@ -214,26 +224,69 @@ class DistributedReservoirServer(AsyncReservoirServer):
                         prefix + [res], axis=0)
         return alive
 
+    # -- fault detection / autoscale -----------------------------------------
+    def _handle_faults(self) -> None:
+        """Convert activated shard deaths into the elastic shrink path.
+
+        Unplanned shard death is *detected* here (the plan's clock
+        passed the event) and handled with exactly the machinery a
+        planned shrink uses: snapshot, rebuild on the survivors,
+        re-admit — zero request loss, no new recovery code path."""
+        dead = set(self.fault_plan.take_dead_shards())
+        if not dead:
+            return
+        failed = min(len(dead), self.n_shards - 1)
+        if failed <= 0:
+            return
+        obs.event("shard_death_detected", shards=sorted(dead),
+                  at=self.now)
+        self.shrink(failed=failed)
+
+    def _maybe_autoscale(self) -> None:
+        """One :class:`~repro.runtime.elastic.AutoscalePolicy` consult,
+        rate-limited by the policy's cooldown so a rebuild's re-admission
+        transient cannot immediately trigger the next decision."""
+        if self._autoscale_cooldown > 0:
+            self._autoscale_cooldown -= 1
+            return
+        pol = self.autoscale
+        verdict = pol.decide(pending=self.pending,
+                             live=self.batcher.live,
+                             n_slots=self.batcher.n_slots,
+                             n_shards=self.n_shards)
+        if verdict > 0:
+            ceiling = min(pol.max_shards, len(jax.devices()))
+            if self.n_shards < ceiling:
+                self.grow(min(verdict, ceiling - self.n_shards))
+                self._autoscale_cooldown = pol.cooldown_steps
+        elif verdict < 0 and self.n_shards > pol.min_shards:
+            self.shrink(
+                failed=min(-verdict, self.n_shards - pol.min_shards))
+            self._autoscale_cooldown = pol.cooldown_steps
+
     # -- elastic -------------------------------------------------------------
-    def shrink(self, failed: int = 1) -> dict:
-        """Simulated shard loss: rebuild on the survivors, lose nothing.
+    def _rebuild(self, new_n: int) -> int:
+        """Rebuild the pool on a ``new_n``-shard mesh, carrying every
+        live slot across — the shared core of :meth:`shrink` and
+        :meth:`grow`.
 
-        Executes :func:`repro.runtime.elastic.shrink_serve_plan`'s action
-        list: snapshot every live slot (state + remaining inputs + output
-        so far), rebuild the engine on a mesh of the surviving devices
-        (the :class:`ExecutionPlan` is cached per matrix, so this is jit
-        setup only), stand up a fresh sharded batcher, and push the
+        Snapshots every live slot (state + remaining inputs + output so
+        far), rebuilds the engine on the new mesh (the
+        :class:`ExecutionPlan` is cached per matrix, so this is jit
+        setup only), stands up a fresh sharded batcher, and pushes the
         snapshots back through the global FIFO — they sort by their
-        original arrival times, so they re-seat first.  Returns the plan
-        dict (with ``n_shards`` before/after) for the caller's logs.
+        original arrival times, so they re-seat first (and on a grow the
+        least-loaded admission spreads them over the new width).
+        Returns the number of carried sequences.
         """
-        plan = shrink_serve_plan(self.n_shards, failed)
-        new_n = max(plan["usable_devices"], 1)
         carried = self.batcher.snapshot_live()
-
+        devices = list(self.engine.mesh.devices.ravel())
+        if new_n > len(devices):
+            # grow: extend with devices not already in the mesh, keeping
+            # the surviving shard order stable
+            devices += [d for d in jax.devices() if d not in devices]
         engine = self.engine.like(
-            mesh=make_data_mesh(devices=self.engine.mesh.devices.ravel()
-                                [:new_n].tolist()))
+            mesh=make_data_mesh(devices=devices[:new_n]))
         self.engine = engine
         self._shard_epochs.append(self.batcher.shard_stats)
         self.batcher = ShardedContinuousBatcher(
@@ -241,8 +294,9 @@ class DistributedReservoirServer(AsyncReservoirServer):
             chunk_steps=self.chunk_steps, want_states=self.want_states,
             zero_copy=self.batcher.zero_copy,
             resolver=self._resolve_engine)
-        # tenant engines were mapped on the lost mesh — rebuild lazily on
-        # the survivors' mesh as pinned requests re-resolve
+        self.batcher.fault_plan = self.fault_plan
+        # tenant engines were mapped on the old mesh — rebuild lazily on
+        # the new mesh as pinned requests re-resolve
         self._model_engines.clear()
 
         for qreq, remaining, state, chunks in carried:
@@ -256,20 +310,60 @@ class DistributedReservoirServer(AsyncReservoirServer):
             heapq.heappush(self._queue,
                            (qreq.arrival_time, qreq.seq, qreq))
             qreq.admit_time = None
-            # wait accounting restarts at the shrink; the heap key above
+            # wait accounting restarts at the rebuild; the heap key above
             # keeps the original priority
             qreq.arrival_time = self.now
             # it was already admitted once — carried work is never dropped
             # and never double-counted in the server's admission stats
             qreq.deadline = None
             qreq.requeued = True
-        self.reshards += 1
         self.readmitted += len(carried)
+        return len(carried)
+
+    def shrink(self, failed: int = 1) -> dict:
+        """Simulated shard loss: rebuild on the survivors, lose nothing.
+
+        Executes :func:`repro.runtime.elastic.shrink_serve_plan`'s action
+        list through :meth:`_rebuild`.  Returns the plan dict (with
+        ``n_shards`` before/after) for the caller's logs.
+        """
+        plan = shrink_serve_plan(self.n_shards, failed)
+        new_n = max(plan["usable_devices"], 1)
+        carried = self._rebuild(new_n)
+        self.reshards += 1
         plan["n_shards_before"] = plan["survivors"] + failed
         plan["n_shards_after"] = new_n
-        plan["readmitted"] = len(carried)
+        plan["readmitted"] = carried
         obs.event("shrink", failed=failed, n_shards_after=new_n,
-                  readmitted=len(carried))
+                  readmitted=carried)
         obs.inc("shrinks_total")
+        obs.set_gauge("n_shards", new_n)
+        return plan
+
+    def grow(self, added: int = 1) -> dict:
+        """Elastic scale-up: admit ``added`` new shards under live
+        traffic — the inverse of :meth:`shrink` (ROADMAP 4b).
+
+        Executes :func:`repro.runtime.elastic.grow_serve_plan` through
+        the same snapshot/re-admit machinery: in-flight sequences resume
+        from their carried states (bit-identical — the per-shard program
+        shape is independent of the shard count), completed chunks are
+        stitched as prefixes, nothing is dropped or re-run, and the
+        least-loaded FIFO admission rebalances the sub-pools over the
+        wider pool.  The target width is capped at the visible device
+        count.  Returns the executed plan dict.
+        """
+        plan = grow_serve_plan(self.n_shards, added,
+                               max_shards=len(jax.devices()))
+        new_n = plan["n_shards_after"]
+        if new_n <= self.n_shards:
+            plan["readmitted"] = 0
+            return plan                   # nothing to add (device ceiling)
+        carried = self._rebuild(new_n)
+        self.grows += 1
+        plan["readmitted"] = carried
+        obs.event("grow", added=plan["added"], n_shards_after=new_n,
+                  readmitted=carried)
+        obs.inc("grows_total")
         obs.set_gauge("n_shards", new_n)
         return plan

@@ -16,7 +16,8 @@ from typing import Callable, Optional
 import numpy as np
 
 __all__ = ["plan_mesh", "replan_after_failure", "shrink_serve_plan",
-           "swap_serve_plan", "StragglerWatchdog", "Heartbeats"]
+           "grow_serve_plan", "swap_serve_plan", "AutoscalePolicy",
+           "StragglerWatchdog", "Heartbeats"]
 
 
 def plan_mesh(n_devices: int, model_parallel: int,
@@ -87,6 +88,82 @@ def shrink_serve_plan(n_shards: int, failed: int) -> dict:
         "resume: queued requests were never lost, they stay in the FIFO",
     ]
     return base
+
+
+def grow_serve_plan(n_shards: int, added: int,
+                    max_shards: int | None = None) -> dict:
+    """Scale-up response for a data-parallel serving pool — the inverse
+    of :func:`shrink_serve_plan`.
+
+    New shards join under live traffic: the engine is rebuilt on the
+    wider mesh (the :class:`ExecutionPlan` is cached per matrix, so this
+    is jit setup only, and the per-shard compiled program is unchanged —
+    the local sub-pool shape ``(slots_per_shard, chunk_steps, I)`` does
+    not depend on the shard count, which is what keeps resumed
+    trajectories bit-identical across the rebuild), and the in-flight
+    snapshot re-admits through the global FIFO whose least-loaded
+    admission rebalances the sub-pools over the wider pool automatically.
+    Completed work is never dropped or re-run: produced chunks are
+    stitched as prefixes, states resume from the snapshot carry.
+    ``DistributedReservoirServer.grow`` executes the plan.
+    """
+    assert added >= 0
+    new_n = n_shards + added
+    if max_shards is not None:
+        new_n = min(new_n, max_shards)
+    shape, axes = plan_mesh(max(new_n, 1), model_parallel=1)
+    return {
+        "n_shards_before": n_shards,
+        "n_shards_after": new_n,
+        "added": new_n - n_shards,
+        "mesh_shape": shape,
+        "mesh_axes": axes,
+        "actions": [
+            "freeze admission; no new chunk is launched",
+            "snapshot per-slot reservoir state x(t), consumed step "
+            "counts, and produced chunks",
+            "rebuild the sharded engine on the widened mesh "
+            "(ExecutionPlan is cached per matrix — no re-lowering; the "
+            "per-shard program shape is unchanged)",
+            "re-admit in-flight sequences with x0 = snapshot via the "
+            "global FIFO — least-loaded shard admission rebalances the "
+            "sub-pools across the new width",
+            "resume: queued requests were never lost, they stay in the "
+            "FIFO and now drain over more shards",
+        ],
+    }
+
+
+@dataclasses.dataclass
+class AutoscalePolicy:
+    """Queue-depth / occupancy driven elastic scaling decisions.
+
+    Consulted by ``DistributedReservoirServer`` once per scheduler step:
+    ``decide()`` answers +1 (grow a shard), -1 (retire a shard) or 0.
+    Growth triggers when the backlog exceeds ``grow_queue_per_slot``
+    queued requests per pool slot — the queue is outrunning the pool;
+    scale-down triggers only when the queue is EMPTY and pool occupancy
+    sits below ``shrink_occupancy`` — capacity is provably idle.
+    ``cooldown_steps`` scheduler steps must pass between decisions so a
+    rebuild's re-admission transient never triggers the next decision
+    (flap damping).
+    """
+
+    min_shards: int = 1
+    max_shards: int = 8
+    grow_queue_per_slot: float = 1.0
+    shrink_occupancy: float = 0.25
+    cooldown_steps: int = 4
+
+    def decide(self, *, pending: int, live: int, n_slots: int,
+               n_shards: int) -> int:
+        if (n_shards < self.max_shards
+                and pending > self.grow_queue_per_slot * n_slots):
+            return 1
+        if (n_shards > self.min_shards and pending == 0
+                and live <= self.shrink_occupancy * n_slots):
+            return -1
+        return 0
 
 
 def swap_serve_plan(name: str, old_version: int | None,

@@ -8,9 +8,16 @@
   chunked rollouts with per-slot reservoir-state carry (multi-tenant:
   slots pin engines, chunks group by model)
 - ``registry``  — named/versioned models with bit-exact live swap
+- ``admission`` — backpressure: pluggable admission policies (bounded
+  queue, deadline shedding, weighted tenant fairness) with explicit
+  ``status="rejected"`` results instead of silent unbounded queueing
 - ``stats``     — throughput / latency / padding / queue telemetry
 """
 
+from repro.serve.admission import (AdmissionPolicy,  # noqa: F401
+                                   BoundedQueuePolicy, CompositePolicy,
+                                   DeadlineShedPolicy, Rejection,
+                                   TenantFairnessPolicy, default_policy)
 from repro.serve.api import RolloutResult, SubmitSpec  # noqa: F401
 from repro.serve.batching import (MicroBatch, PaddingBucketer,  # noqa: F401
                                   RolloutRequest)
@@ -27,4 +34,7 @@ __all__ = ["SubmitSpec", "RolloutResult", "ReservoirEngine", "engine_for",
            "engine_cache_clear", "engine_cache_demote", "engine_cache_stats",
            "ServeStats", "PaddingBucketer", "RolloutRequest", "MicroBatch",
            "AsyncReservoirServer", "ContinuousBatcher", "QueuedRequest",
-           "ModelRegistry", "ModelVersion", "TenantPolicy"]
+           "ModelRegistry", "ModelVersion", "TenantPolicy",
+           "AdmissionPolicy", "BoundedQueuePolicy", "DeadlineShedPolicy",
+           "TenantFairnessPolicy", "CompositePolicy", "Rejection",
+           "default_policy"]

@@ -128,12 +128,25 @@ class RolloutResult:
       routed request was served by;
     * ``trace_id``           — the observability correlation id (set
       when ``repro.obs`` tracing is enabled or the spec carried one).
+
+    ``status`` is ``"ok"`` on every served result.  A server whose
+    admission policy refuses a submission answers immediately with
+    ``status="rejected"`` — no payload, and ``timings`` carrying
+    ``reason`` (``"queue_full"`` / ``"deadline_unmeetable"`` /
+    ``"tenant_over_share"``) plus ``retry_after_s``, the policy's
+    estimate of when resubmitting could succeed.
     """
 
     preds: Any | None = None
     states: Any | None = None
     final_state: Any | None = None
     timings: dict = dataclasses.field(default_factory=dict)
+    status: str = "ok"
+
+    @property
+    def rejected(self) -> bool:
+        """True when admission control refused this submission."""
+        return self.status == "rejected"
 
     @property
     def output(self) -> Any:

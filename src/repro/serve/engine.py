@@ -56,6 +56,10 @@ from repro.serve.stats import ServeStats
 # so user code's own donation warnings still surface.
 _DONATION_WARNING = "Some donated buffers were not usable"
 
+# one process-wide warning for deadline-bearing specs on the one-shot
+# path (the result still records timings["deadline_ignored"] every time)
+_WARNED_DEADLINE = False
+
 
 def donated_call(fn, u, x0b):
     """Invoke a donated rollout with the no-op-donation warning muted
@@ -405,15 +409,29 @@ class ReservoirEngine:
         ``inputs`` may be (T, I) or pre-batched (B, T, I); the result's
         ``preds``/``states``/``final_state`` match that leading shape.
         ``final_state`` is exactly x(T) — the chunk-resume carry.
-        ``spec.deadline`` is ignored here (no queue to wait in); routed
-        ``spec.model`` requests belong on a registry-backed server or
-        :meth:`ModelRegistry.submit`.
+        ``spec.deadline`` cannot be enforced here (no queue to wait in,
+        and the fused rollout is not preemptible): a spec carrying one
+        warns once per process and the result records
+        ``timings["deadline_ignored"] = True`` so callers can tell the
+        contract was not honored — deadline-bearing work belongs on a
+        server.  Routed ``spec.model`` requests belong on a
+        registry-backed server or :meth:`ModelRegistry.submit`.
         """
         if spec.model is not None:
             raise ValueError(
                 f"spec routes to model {spec.model!r} but this is a bare "
                 "single-model engine; submit through a registry-backed "
                 "server (or ModelRegistry.submit)")
+        deadline_ignored = spec.deadline is not None
+        if deadline_ignored:
+            global _WARNED_DEADLINE
+            if not _WARNED_DEADLINE:
+                _WARNED_DEADLINE = True
+                warnings.warn(
+                    "SubmitSpec.deadline is ignored by one-shot "
+                    "ReservoirEngine.submit (there is no queue to wait "
+                    "in); submit through AsyncReservoirServer to get "
+                    "deadline enforcement", UserWarning, stacklevel=2)
         want = self._resolve_want(spec.want_states)
         u, x0b, single = self._prepare(spec.inputs, spec.x0)
         b, t, _ = u.shape
@@ -427,13 +445,16 @@ class ReservoirEngine:
         obs.observe("request_latency_seconds", finish - t0, path="engine")
         if single:
             out, xf = out[0], xf[0]
+        timings = lifecycle_timings(arrival_time=t0, admit_time=t0,
+                                    finish_time=finish,
+                                    seconds=finish - t0,
+                                    trace_id=trace_id)
+        if deadline_ignored:
+            timings["deadline_ignored"] = True
         return RolloutResult(preds=None if want else out,
                              states=out if want else None,
                              final_state=xf,
-                             timings=lifecycle_timings(
-                                 arrival_time=t0, admit_time=t0,
-                                 finish_time=finish, seconds=finish - t0,
-                                 trace_id=trace_id))
+                             timings=timings)
 
     def submit_many(self, specs: Sequence[SubmitSpec],
                     bucketer: PaddingBucketer | None = None) -> dict:

@@ -28,6 +28,7 @@ import time
 from typing import Any, Callable
 
 from repro import obs
+from repro.runtime import faults
 from repro.serve.api import SubmitSpec
 from repro.serve.engine import engine_cache_demote, engine_for
 from repro.runtime.elastic import swap_serve_plan
@@ -202,6 +203,21 @@ class ModelRegistry:
             else:
                 self.engine(name, mv.version)
         prewarm_s = time.perf_counter() - t0
+        # fault-injection seam: an installed FaultPlan may abort the swap
+        # at the worst moment — after the prewarm spend, before the
+        # cutover.  The active version is untouched (the one dict write
+        # below never happened) and the prewarmed version stays
+        # registered inactive, so a retry publishes it without
+        # recompiling.  In-flight and future traffic keep serving the old
+        # version with zero drops.
+        fault_plan = faults.active()
+        if fault_plan is not None and fault_plan.take_publish_abort():
+            obs.event("publish_abort", model=name, old_version=old,
+                      staged_version=mv.version, prewarm_s=prewarm_s)
+            obs.inc("publish_aborts_total", model=name)
+            raise faults.PublishAborted(
+                f"injected abort publishing {name!r} v{mv.version}: "
+                f"active version stays {old!r}")
         # atomic cutover: one dict write — admissions resolve the active
         # version at a single point (_resolve_engine), so a request sees
         # wholly-old or wholly-new, never a mix

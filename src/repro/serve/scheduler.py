@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.runtime.faults import TransientFault
 from repro.serve.api import (_UNSET, RolloutResult, SubmitSpec,
                              lifecycle_timings, warn_deprecated)
 from repro.serve.batching import RolloutRequest
@@ -195,6 +196,14 @@ class ContinuousBatcher:
         self.last_take: dict = {}               # slot -> steps, last chunk
         self.last_retired_slots: list = []
         self.last_models: dict = {}             # slot -> model, last chunk
+        # fault injection (set by the server): transient engine-call
+        # failures raised by the plan are retried here with capped
+        # exponential backoff; the per-chunk virtual-clock charge and
+        # retry count land in last_backoff_s / last_retries for the
+        # server to account
+        self.fault_plan = None
+        self.last_backoff_s = 0.0
+        self.last_retries = 0
         if warm:
             self._warm()
 
@@ -400,17 +409,21 @@ class ContinuousBatcher:
         single = len(groups) == 1
         prev = self._states
         new_states = None
+        self.last_backoff_s = 0.0
+        self.last_retries = 0
         for eng, want, slots in groups.values():
             # zero-copy single group: the carried state buffer is donated
             # to the launch (this batcher owns it and immediately replaces
             # it with xf).  With several groups every call reads ``prev``,
             # so nothing may donate it.  Host syncs stay deferred to
-            # retirement either way.
-            donate = self.zero_copy and single
-            out, xf = eng.run_segment(
-                u, prev, want_states=want,
+            # retirement either way.  An armed fault plan also disables
+            # donation: a failed call must leave the carried state intact
+            # for the retry to replay from.
+            donate = self.zero_copy and single and self.fault_plan is None
+            out, xf = self._faulting_call(
+                eng, u, prev, want=want,
                 real_steps=sum(take.get(i, 0) for i in slots),
-                donate_state=donate, defer_sync=self.zero_copy)
+                donate=donate)
             if single:
                 new_states = xf
             else:
@@ -457,6 +470,40 @@ class ContinuousBatcher:
         self.last_retired_slots = retired_slots
         self.last_models = models
         return retired, sum(take.values())
+
+    def _faulting_call(self, eng, u, prev, *, want, real_steps, donate):
+        """One fused chunk launch under the (optional) fault plan.
+
+        An injected :class:`~repro.runtime.faults.TransientFault` is
+        retried with capped exponential backoff *from the slot's last
+        carried state*: ``u`` and ``prev`` are untouched by the failed
+        attempt (donation is disabled while a plan is armed), so the
+        retry runs the exact same program on the exact same operands —
+        a bit-identical replay, not a best-effort one.  The accumulated
+        backoff lands in ``last_backoff_s`` for the server to charge to
+        its virtual clock.
+        """
+        fp = self.fault_plan
+        if fp is None:
+            return eng.run_segment(u, prev, want_states=want,
+                                   real_steps=real_steps,
+                                   donate_state=donate,
+                                   defer_sync=self.zero_copy)
+        attempt = 0
+        while True:
+            try:
+                fp.check_call()
+                return eng.run_segment(u, prev, want_states=want,
+                                       real_steps=real_steps,
+                                       donate_state=donate,
+                                       defer_sync=self.zero_copy)
+            except TransientFault:
+                if attempt >= fp.max_attempts:
+                    raise
+                self.last_backoff_s += fp.backoff_s(attempt)
+                self.last_retries += 1
+                attempt += 1
+                obs.inc("engine_call_retries_total")
 
     def _materialize(self, chunk: _DeviceChunk) -> None:
         """THE deferred device->host sync point, paid once per chunk
@@ -550,7 +597,7 @@ class AsyncReservoirServer:
                  chunk_time: float | None = None,
                  batcher: ContinuousBatcher | None = None,
                  zero_copy: bool | None = None,
-                 registry=None):
+                 registry=None, admission=None, fault_plan=None):
         if return_states is not _UNSET:
             warn_deprecated(
                 "AsyncReservoirServer(return_states=...) is deprecated; "
@@ -574,6 +621,13 @@ class AsyncReservoirServer:
         self._seq = 0
         self.registry = None
         self.tenant_stats: dict[str, ServeStats] = {}
+        # backpressure: an AdmissionPolicy consulted at submit time; None
+        # keeps the historical accept-everything FIFO
+        self.admission = admission
+        # fault injection: the plan is driven by this server's clock and
+        # consulted by the batcher's chunk launches
+        self.fault_plan = fault_plan
+        self.batcher.fault_plan = fault_plan
         if registry is not None:
             registry.attach(self)
 
@@ -633,6 +687,13 @@ class AsyncReservoirServer:
         Passing a bare :class:`RolloutRequest` still works for one
         release (with a DeprecationWarning) and answers with the raw
         output array; specs answer with :class:`RolloutResult`.
+
+        When an :class:`~repro.serve.admission.AdmissionPolicy` is
+        attached it is consulted here, before the request joins the
+        queue: a refusal answers immediately with a
+        ``RolloutResult(status="rejected")`` (reason + ``retry_after_s``
+        hint in ``timings``) instead of a :class:`QueuedRequest` —
+        bounded backpressure, never silent unbounded queueing.
         """
         at = self.now if arrival_time is None else float(arrival_time)
         if isinstance(request, SubmitSpec):
@@ -664,6 +725,10 @@ class AsyncReservoirServer:
                                  else float(deadline),
                                  trace_id=obs.new_trace_id())
         self._seq += 1
+        if self.admission is not None:
+            verdict = self.admission.admit(self, qreq)
+            if verdict is not None:
+                return self._reject(qreq, verdict)
         heapq.heappush(self._queue, (at, qreq.seq, qreq))
         self.stats.record_enqueue()
         obs.inc("requests_submitted_total",
@@ -674,6 +739,32 @@ class AsyncReservoirServer:
         if ts is not None:
             ts.record_enqueue()
         return qreq
+
+    def _reject(self, qreq: QueuedRequest, verdict) -> RolloutResult:
+        """Refuse one submission at the door: count it (``rejected`` or
+        ``shed``), emit the obs metric, and answer an explicit
+        ``status="rejected"`` result carrying the reason and the
+        policy's retry-after hint.  The request never enters the queue
+        and never appears in ``enqueued``/``timed_out``."""
+        self.stats.record_rejection(shed=verdict.shed)
+        labels = {} if qreq.model is None else {"model": qreq.model}
+        obs.inc("requests_shed_total" if verdict.shed
+                else "requests_rejected_total",
+                reason=verdict.reason, **labels)
+        obs.span("request.reject", self.now, trace_id=qreq.trace_id,
+                 clock="server", uid=str(qreq.uid), reason=verdict.reason)
+        ts = self._tstats(qreq.model)
+        if ts is not None:
+            ts.record_rejection(shed=verdict.shed)
+        timings = lifecycle_timings(
+            arrival_time=qreq.arrival_time, admit_time=qreq.arrival_time,
+            finish_time=qreq.arrival_time, model=qreq.model,
+            trace_id=qreq.trace_id)
+        timings["reason"] = verdict.reason
+        timings["retry_after_s"] = float(verdict.retry_after_s)
+        result = RolloutResult(timings=timings, status="rejected")
+        self.results[qreq.uid] = result
+        return result
 
     @property
     def pending(self) -> int:
@@ -695,6 +786,38 @@ class AsyncReservoirServer:
                    if q is not None and q.model == qreq.model)
         return live >= quota
 
+    def _timeout(self, qreq: QueuedRequest) -> None:
+        """Bookkeeping for one queued request dropped past its deadline."""
+        self.stats.record_timeout()
+        obs.inc("requests_timed_out_total",
+                **({} if qreq.model is None else {"model": qreq.model}))
+        obs.span("request.timeout", self.now, trace_id=qreq.trace_id,
+                 clock="server", uid=str(qreq.uid))
+        ts = self._tstats(qreq.model)
+        if ts is not None:
+            ts.record_timeout()
+
+    def _drop_expired(self) -> None:
+        """Drop every *arrived* queued request whose deadline has passed.
+
+        Called on every clock advance — not only at admission sweeps.
+        The sweep in :meth:`_admit_arrived` only examines the queue head
+        while slots are free, so a request waiting behind a live head
+        (pool full) used to linger past its deadline until a slot freed;
+        this catches it the step its deadline passes."""
+        expired = [entry for entry in self._queue
+                   if (entry[2].deadline is not None
+                       and entry[0] <= self.now
+                       and self.now > entry[2].deadline)]
+        if not expired:
+            return
+        dropped = {id(entry[2]) for entry in expired}
+        self._queue = [entry for entry in self._queue
+                       if id(entry[2]) not in dropped]
+        heapq.heapify(self._queue)
+        for _, _, qreq in expired:
+            self._timeout(qreq)
+
     def _admit_arrived(self) -> None:
         held: list[tuple[float, int, QueuedRequest]] = []
         while self._queue and self._queue[0][0] <= self.now:
@@ -703,16 +826,7 @@ class AsyncReservoirServer:
                 # expired while queued: drop it instead of rolling steps
                 # nobody is waiting for anymore
                 heapq.heappop(self._queue)
-                self.stats.record_timeout()
-                obs.inc("requests_timed_out_total",
-                        **({} if qreq.model is None
-                           else {"model": qreq.model}))
-                obs.span("request.timeout", self.now,
-                         trace_id=qreq.trace_id, clock="server",
-                         uid=str(qreq.uid))
-                ts = self._tstats(qreq.model)
-                if ts is not None:
-                    ts.record_timeout()
+                self._timeout(qreq)
                 continue
             if not self.batcher.has_free_slot():
                 break
@@ -784,6 +898,13 @@ class AsyncReservoirServer:
                                  trace_id=qreq.trace_id))
 
     # -- event loop ----------------------------------------------------------
+    def _handle_faults(self) -> None:
+        """Fault-plan hook between clock activation and admission.  The
+        base pool has no shards to lose (transient failures are retried
+        inside the batcher, straggler windows charged at clock advance);
+        the distributed server overrides this to convert activated shard
+        deaths into the elastic ``shrink()`` path."""
+
     def step(self) -> bool:
         """Admit + one chunk + retire.  Returns False once drained."""
         if self.drained:
@@ -791,6 +912,9 @@ class AsyncReservoirServer:
         if self.batcher.live == 0 and self._queue:
             # pool idle: fast-forward the clock to the next arrival
             self.now = max(self.now, self._queue[0][0])
+        if self.fault_plan is not None:
+            self.fault_plan.begin_chunk(self.now)
+            self._handle_faults()
         self._admit_arrived()
         if self.batcher.live == 0:
             # everything at the head expired (or only future arrivals are
@@ -800,7 +924,19 @@ class AsyncReservoirServer:
         chunk_start = self.now
         retired, real_steps = self.batcher.run_chunk()
         wall = time.perf_counter() - t0
-        self.now += wall if self.chunk_time is None else self.chunk_time
+        dt = wall if self.chunk_time is None else self.chunk_time
+        if self.fault_plan is not None:
+            # straggler windows inflate the chunk's charge; retry backoff
+            # from transient failures is time the requests really waited
+            dt = dt * self.fault_plan.slow_factor() \
+                + self.batcher.last_backoff_s
+            for _ in range(self.batcher.last_retries):
+                self.stats.record_retry()
+        self.now += dt
+        # deadlines are checked on every clock advance, not only at
+        # admission sweeps — an expired request must not linger behind a
+        # full pool
+        self._drop_expired()
         self.stats.record_chunk(
             live_steps=real_steps,
             total_steps=self.batcher.n_slots * self.batcher.chunk_steps)

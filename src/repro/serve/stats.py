@@ -33,6 +33,15 @@ class ServeStats:
     admitted: int = 0              # requests seated in a slot
     completed: int = 0             # requests fully served
     timed_out: int = 0             # queued requests dropped past deadline
+    rejected: int = 0              # submissions refused outright by the
+    #                                admission policy (bounded queue /
+    #                                fairness) — never entered the queue
+    shed: int = 0                  # submissions refused because the
+    #                                estimated queue delay already blows
+    #                                the request's deadline
+    retries: int = 0               # transient engine-call failures
+    #                                replayed from the slot's carried
+    #                                state (fault-injection recovery)
     quota_held: int = 0            # admission deferrals: a free slot
     #                                existed but the request's tenant was
     #                                at its concurrency quota (counted per
@@ -58,7 +67,8 @@ class ServeStats:
     _SUM_FIELDS = ("calls", "deferred_calls", "sequences", "steps_real",
                    "steps_padded",
                    "seconds", "enqueued", "admitted", "completed",
-                   "timed_out", "quota_held", "chunks", "queue_wait_s",
+                   "timed_out", "rejected", "shed", "retries",
+                   "quota_held", "chunks", "queue_wait_s",
                    "first_outputs",
                    "ttfp_s", "slot_steps_live", "slot_steps_total")
 
@@ -140,6 +150,24 @@ class ServeStats:
         """One queued request dropped because its deadline passed before a
         slot freed up (it never occupied one)."""
         self.timed_out += 1
+
+    def record_rejection(self, *, shed: bool = False) -> None:
+        """One submission refused at the door by the admission policy.
+
+        ``shed=True`` marks a deadline shed (the delay estimate said the
+        deadline cannot be met); otherwise it is a hard rejection
+        (bounded queue depth / tenant fairness).  Rejected requests never
+        enter the queue, so they appear in neither ``enqueued`` nor
+        ``timed_out``."""
+        if shed:
+            self.shed += 1
+        else:
+            self.rejected += 1
+
+    def record_retry(self) -> None:
+        """One transient engine-call failure replayed (bit-identically)
+        from the slot's last carried state."""
+        self.retries += 1
 
     def record_quota_hold(self) -> None:
         """One admission sweep skipped a request whose tenant was at its
@@ -237,6 +265,11 @@ class ServeStats:
             })
             if self.quota_held:
                 out["quota_held"] = self.quota_held
+            if self.rejected or self.shed:
+                out["rejected"] = self.rejected
+                out["shed"] = self.shed
+            if self.retries:
+                out["retries"] = self.retries
             if self.latencies:
                 out["p50_latency_ms"] = self.latency_percentile(50.0) * 1e3
                 out["p99_latency_ms"] = self.p99_latency_s * 1e3
@@ -263,6 +296,8 @@ class ServeStats:
             # drops and holds are SLO facts: always rendered (zero
             # included), so a dashboard line never hides them
             line += f", {self.timed_out} timed out"
+            line += f", {self.rejected} rejected"
+            line += f", {self.shed} shed"
             line += f", {self.quota_held} quota held"
         if self.shards is not None:
             for label, p in self.shards.items():

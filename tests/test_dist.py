@@ -28,7 +28,9 @@ import pytest
 from repro.core.esn import ESNConfig, fit_readout, init_esn, run_reservoir
 from repro.dist import (DistributedReservoirServer, ShardedContinuousBatcher,
                         ShardedReservoirEngine)
-from repro.runtime.elastic import shrink_serve_plan
+from repro.runtime.elastic import (AutoscalePolicy, grow_serve_plan,
+                                   shrink_serve_plan)
+from repro.runtime.faults import FaultEvent, FaultPlan
 from repro.serve import (ReservoirEngine, RolloutRequest, ServeStats,
                          SubmitSpec)
 
@@ -114,6 +116,44 @@ class TestShrinkServePlan:
         assert "re-admit" in acts.lower()
         assert "snapshot" in acts.lower()
         assert "cached" in acts.lower()
+
+
+class TestGrowServePlan:
+    def test_inverse_of_shrink(self):
+        plan = grow_serve_plan(5, 3)
+        assert plan["n_shards_before"] == 5
+        assert plan["n_shards_after"] == 8 and plan["added"] == 3
+        assert plan["mesh_shape"] == (8, 1)
+
+    def test_device_ceiling_caps_width(self):
+        plan = grow_serve_plan(6, 4, max_shards=8)
+        assert plan["n_shards_after"] == 8 and plan["added"] == 2
+        assert grow_serve_plan(8, 2, max_shards=8)["added"] == 0
+
+    def test_actions_cover_rebalance(self):
+        acts = " ".join(grow_serve_plan(2, 2)["actions"])
+        assert "rebalance" in acts.lower()
+        assert "snapshot" in acts.lower()
+
+
+class TestAutoscalePolicy:
+    def test_grows_on_backlog(self):
+        pol = AutoscalePolicy(max_shards=8, grow_queue_per_slot=1.0)
+        assert pol.decide(pending=20, live=16, n_slots=16, n_shards=4) == 1
+        # at the ceiling: never grows past max_shards
+        assert pol.decide(pending=20, live=16, n_slots=16, n_shards=8) == 0
+
+    def test_shrinks_only_when_idle(self):
+        pol = AutoscalePolicy(min_shards=2, shrink_occupancy=0.25)
+        assert pol.decide(pending=0, live=1, n_slots=16, n_shards=4) == -1
+        # queued work blocks scale-down even at low occupancy
+        assert pol.decide(pending=1, live=1, n_slots=16, n_shards=4) == 0
+        # never below min_shards
+        assert pol.decide(pending=0, live=0, n_slots=16, n_shards=2) == 0
+
+    def test_steady_state_holds(self):
+        pol = AutoscalePolicy()
+        assert pol.decide(pending=4, live=12, n_slots=16, n_shards=4) == 0
 
 
 class TestSingleShardParity:
@@ -298,6 +338,105 @@ class TestMultiDeviceShrink:
         srv.shrink(failed=4)
         res = srv.run()
         assert res["a"].output.shape == (8, 2)
+
+
+@multi_device
+class TestMultiDeviceGrow:
+    """Elastic grow under live traffic: the inverse of shrink, same
+    snapshot/re-admit machinery, zero drops."""
+
+    def test_shrink_grow_round_trip_bit_identical(self):
+        """Property test: a pool shrunk then regrown under traffic
+        serves every request with outputs bit-identical to an
+        undisturbed run.  ``slots_per_shard=2`` keeps the local batch
+        >= 2, where the per-shard program (whose shape is independent
+        of the shard count) is exactly the contract's bit-identity
+        regime."""
+        p = _params()
+        lengths = [12] * 12
+
+        def serve(disturb):
+            eng = ShardedReservoirEngine(p, n_shards=4, stats=ServeStats())
+            srv = DistributedReservoirServer(eng, slots_per_shard=2,
+                                             chunk_steps=4, chunk_time=1.0,
+                                             stats=ServeStats())
+            for r in _requests(lengths, seed=9):
+                srv.submit(r, arrival_time=0.0)
+            if disturb:
+                srv.step()                      # 8 in flight, mid-rollout
+                srv.shrink(failed=2)
+                srv.step()                      # roll a chunk at width 2
+                plan = srv.grow(2)
+                assert plan["n_shards_after"] == 4 and srv.n_shards == 4
+                assert srv.grows == 1 and srv.reshards == 1
+            return srv.run(), srv
+
+        ref, _ = serve(disturb=False)
+        res, srv = serve(disturb=True)
+        assert len(res) == len(ref) == 12       # zero drops
+        assert srv.stats.completed == 12
+        assert srv.stats.admitted == srv.stats.enqueued == 12
+        for uid in ref:
+            np.testing.assert_array_equal(np.asarray(res[uid].output),
+                                          np.asarray(ref[uid].output))
+
+    def test_grow_rebalances_subpools(self):
+        """After a grow the least-loaded FIFO admission spreads carried
+        + queued work over the new shards — the widened pool actually
+        serves, it doesn't just exist."""
+        p = _params()
+        eng = ShardedReservoirEngine(p, n_shards=2, stats=ServeStats())
+        srv = DistributedReservoirServer(eng, slots_per_shard=2,
+                                         chunk_steps=4, chunk_time=1.0,
+                                         stats=ServeStats())
+        for r in _requests([16] * 12, seed=10):
+            srv.submit(r, arrival_time=0.0)
+        srv.step()
+        assert srv.batcher.live == 4
+        srv.grow(2)
+        assert srv.n_shards == 4 and srv.batcher.n_slots == 8
+        srv.step()
+        # every shard of the widened pool holds seated work
+        assert all(f < srv.slots_per_shard
+                   for f in srv.batcher.free_slots_by_shard())
+        res = srv.run()
+        assert len(res) == 12 and srv.stats.completed == 12
+        merged = srv.shard_summary()
+        assert merged.completed == 12
+
+    def test_fault_plan_shard_death_recovers_through_shrink(self):
+        """An unplanned shard death scheduled by the fault plan is
+        detected at the next step and converted into the shrink path:
+        zero request loss, and an autoscale policy grows the pool back
+        under the remaining backlog."""
+        p = _params()
+        plan = FaultPlan([FaultEvent("shard_loss", at=2.0, shard=1)])
+        eng = ShardedReservoirEngine(p, n_shards=4, stats=ServeStats())
+        srv = DistributedReservoirServer(
+            eng, slots_per_shard=2, chunk_steps=4, chunk_time=1.0,
+            stats=ServeStats(), fault_plan=plan,
+            autoscale=AutoscalePolicy(min_shards=1, max_shards=4,
+                                      cooldown_steps=2))
+        reqs = _requests([12] * 20, seed=11)
+        for r in reqs:
+            srv.submit(r, arrival_time=0.0)
+        res = srv.run()
+        assert plan.injected.get("shard_loss") == 1
+        assert srv.reshards >= 1                 # death -> shrink path
+        assert srv.grows >= 1                    # backlog -> grow back
+        assert len(res) == 20 and srv.stats.completed == 20
+
+        # bit-identical to the undisturbed reference run
+        eng2 = ShardedReservoirEngine(p, n_shards=4, stats=ServeStats())
+        ref_srv = DistributedReservoirServer(eng2, slots_per_shard=2,
+                                             chunk_steps=4, chunk_time=1.0,
+                                             stats=ServeStats())
+        for r in _requests([12] * 20, seed=11):
+            ref_srv.submit(r, arrival_time=0.0)
+        ref = ref_srv.run()
+        for uid in ref:
+            np.testing.assert_array_equal(np.asarray(res[uid].output),
+                                          np.asarray(ref[uid].output))
 
 
 @multi_device

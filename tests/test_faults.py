@@ -1,0 +1,226 @@
+"""Deterministic fault injection: transient retry bit-identity, straggler
+windows, publish aborts, and plan determinism.
+
+The load-bearing contract: every fault the plan injects is *recovered
+from* with outputs bit-identical to an undisturbed run.  Transient
+engine-call failures are raised before the launch, so the retry replays
+the exact same (inputs, pre-chunk state) pair; straggler windows only
+inflate the virtual clock; a publish abort leaves the active version
+untouched and the staged version ready for a no-recompile retry.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.esn import ESNConfig, fit_readout, init_esn, run_reservoir
+from repro.runtime.faults import (FaultEvent, FaultPlan, PublishAborted,
+                                  TransientFault)
+from repro.runtime import faults
+from repro.serve import (AsyncReservoirServer, ModelRegistry,
+                         ReservoirEngine, ServeStats, SubmitSpec)
+
+
+def _params(mode="fp32", dim=96, leak=0.7, seed=1, block=32):
+    cfg = ESNConfig(reservoir_dim=dim, element_sparsity=0.8, mode=mode,
+                    leak=leak, seed=seed, block=block, output_dim=2)
+    p = init_esn(cfg)
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.standard_normal((50, 1)), jnp.float32)
+    states = run_reservoir(p, u, engine="scan")
+    y = jnp.concatenate([u, jnp.roll(u, 1)], axis=-1)
+    return fit_readout(p, states, y, lam=1e-2)
+
+
+def _requests(lengths, seed=0, in_dim=1):
+    rng = np.random.default_rng(seed)
+    return [SubmitSpec(rng.standard_normal((t, in_dim)).astype(np.float32),
+                       uid=i)
+            for i, t in enumerate(lengths)]
+
+
+def _server(p, **kw):
+    eng = ReservoirEngine(p, backend="xla", stats=ServeStats())
+    kw.setdefault("chunk_time", 1.0)
+    return AsyncReservoirServer(eng, stats=ServeStats(), **kw)
+
+
+@pytest.fixture(autouse=True)
+def _clear_installed_plan():
+    yield
+    faults.install(None)
+
+
+class TestFaultPlanUnit:
+    def test_seeded_is_deterministic(self):
+        kw = dict(horizon=50.0, n_shards=4, transient_rate=0.2,
+                  slow_rate=0.1, shard_loss_times=[10.0])
+        a = FaultPlan.seeded(7, **kw)
+        b = FaultPlan.seeded(7, **kw)
+        c = FaultPlan.seeded(8, **kw)
+        assert [(e.kind, e.at) for e in a.events] \
+            == [(e.kind, e.at) for e in b.events]
+        assert [(e.kind, e.at) for e in a.events] \
+            != [(e.kind, e.at) for e in c.events]
+        assert any(e.kind == "shard_loss" and e.at == 10.0 for e in a.events)
+
+    def test_begin_chunk_activates_in_time_order(self):
+        plan = FaultPlan([FaultEvent("transient", at=2.0, count=2),
+                          FaultEvent("shard_loss", at=5.0, shard=1)])
+        plan.begin_chunk(1.0)
+        assert plan.injected == {} and plan.take_dead_shards() == []
+        plan.begin_chunk(2.0)          # at <= now activates
+        assert plan.injected == {"transient": 1}
+        with pytest.raises(TransientFault):
+            plan.check_call()
+        with pytest.raises(TransientFault):
+            plan.check_call()
+        plan.check_call()              # count=2 exhausted: clean
+        plan.begin_chunk(6.0)
+        assert plan.take_dead_shards() == [1]
+        assert plan.take_dead_shards() == []       # drained once
+        assert plan.fault_times["shard_loss"] == [6.0]
+
+    def test_backoff_is_capped_exponential(self):
+        plan = FaultPlan(backoff_base_s=0.001, backoff_cap_s=0.05)
+        delays = [plan.backoff_s(i) for i in range(10)]
+        assert delays[:3] == [0.001, 0.002, 0.004]
+        assert max(delays) == 0.05 and delays == sorted(delays)
+
+    def test_slow_window_expires(self):
+        plan = FaultPlan([FaultEvent("slow_shard", at=0.0, factor=3.0,
+                                     duration=2.0)])
+        plan.begin_chunk(0.0)
+        assert plan.slow_factor() == 3.0
+        plan.begin_chunk(1.9)
+        assert plan.slow_factor() == 3.0
+        plan.begin_chunk(2.0)          # window [0, 2) closed
+        assert plan.slow_factor() == 1.0
+
+    def test_publish_abort_arm_and_consume(self):
+        plan = FaultPlan()
+        assert plan.take_publish_abort() is False
+        plan.arm_publish_abort()
+        assert plan.take_publish_abort() is True
+        assert plan.take_publish_abort() is False
+        assert plan.injected["publish_abort"] == 1
+
+    def test_install_active_round_trip(self):
+        assert faults.active() is None
+        plan = FaultPlan()
+        faults.install(plan)
+        assert faults.active() is plan
+        faults.install(None)
+        assert faults.active() is None
+
+
+class TestTransientRetry:
+    def test_retry_replays_bit_identical(self):
+        p = _params()
+        specs = _requests([8, 8, 8, 8], seed=5)
+        ref_srv = _server(p, n_slots=2, chunk_steps=4)
+        for s in specs:
+            ref_srv.submit(s, arrival_time=0.0)
+        ref = ref_srv.run()
+
+        plan = FaultPlan([FaultEvent("transient", at=0.0, count=3)])
+        srv = _server(p, n_slots=2, chunk_steps=4, fault_plan=plan)
+        for s in specs:
+            srv.submit(s, arrival_time=0.0)
+        res = srv.run()
+        assert plan.injected["transient"] == 1
+        assert srv.stats.retries == 3          # count=3 -> 3 retried calls
+        assert srv.stats.completed == 4 and len(res) == 4
+        for uid in ref:
+            np.testing.assert_array_equal(np.asarray(res[uid].output),
+                                          np.asarray(ref[uid].output))
+
+    def test_backoff_charged_to_virtual_clock(self):
+        p = _params()
+        plan = FaultPlan([FaultEvent("transient", at=0.0, count=3)],
+                         backoff_base_s=0.001)
+        srv = _server(p, n_slots=2, chunk_steps=4, fault_plan=plan)
+        for s in _requests([8, 8], seed=6):
+            srv.submit(s, arrival_time=0.0)
+        srv.run()
+        # 2 chunks of 1.0 plus 0.001 + 0.002 + 0.004 of backoff on the
+        # first chunk's three retries
+        assert srv.now == pytest.approx(2.007)
+
+    def test_exhausted_attempts_propagate(self):
+        p = _params()
+        plan = FaultPlan([FaultEvent("transient", at=0.0, count=5)],
+                         max_attempts=2)
+        srv = _server(p, n_slots=1, chunk_steps=4, fault_plan=plan)
+        srv.submit(_requests([4], seed=7)[0], arrival_time=0.0)
+        with pytest.raises(TransientFault):
+            srv.run()
+
+
+class TestSlowWindow:
+    def test_straggler_inflates_clock_not_outputs(self):
+        p = _params()
+        specs = _requests([8, 8], seed=8)
+        ref_srv = _server(p, n_slots=2, chunk_steps=4)
+        for s in specs:
+            ref_srv.submit(s, arrival_time=0.0)
+        ref = ref_srv.run()
+        assert ref_srv.now == pytest.approx(2.0)
+
+        plan = FaultPlan([FaultEvent("slow_shard", at=0.0, factor=3.0,
+                                     duration=2.0)])
+        srv = _server(p, n_slots=2, chunk_steps=4, fault_plan=plan)
+        for s in specs:
+            srv.submit(s, arrival_time=0.0)
+        res = srv.run()
+        # chunk 1 inside the window costs 3.0; chunk 2 (t=3.0) is past it
+        assert srv.now == pytest.approx(4.0)
+        for uid in ref:
+            np.testing.assert_array_equal(np.asarray(res[uid].output),
+                                          np.asarray(ref[uid].output))
+
+
+class TestPublishAbort:
+    def test_abort_leaves_active_version_then_retry_succeeds(self):
+        reg = ModelRegistry(backend="xla")
+        reg.register("m", _params(seed=1))
+        assert reg.active_version("m") == 1
+        plan = FaultPlan()
+        plan.arm_publish_abort()
+        faults.install(plan)
+        with pytest.raises(PublishAborted, match="stays"):
+            reg.publish("m", _params(seed=2))
+        # the worst-moment abort: prewarm spent, cutover never happened
+        assert reg.active_version("m") == 1
+        assert reg.versions("m") == [1, 2]     # staged version survives
+        # retry (same installed plan, abort consumed) activates v2
+        out = reg.publish("m", version=2)
+        assert reg.active_version("m") == 2
+        assert out["version"] == 2 and out["previous_version"] == 1
+
+    def test_serving_unaffected_across_abort(self):
+        reg = ModelRegistry(backend="xla")
+        reg.register("m", _params(seed=1))
+        eng = reg.engine("m")
+        eng.stats = ServeStats()
+        srv = AsyncReservoirServer(eng, n_slots=2, chunk_steps=4,
+                                   chunk_time=1.0, registry=reg,
+                                   stats=ServeStats())
+        # pool-shaped reference: the undisturbed pooled serve of the
+        # same request (one-shot engine bits differ at a different
+        # batch shape, so pooled compares against pooled)
+        srv.submit(SubmitSpec(np.ones((8, 1), np.float32), model="m",
+                              uid="ref"), arrival_time=0.0)
+        before = srv.run()["ref"]
+        plan = FaultPlan()
+        plan.arm_publish_abort()
+        faults.install(plan)
+        with pytest.raises(PublishAborted):
+            reg.publish("m", _params(seed=2))
+        srv.submit(SubmitSpec(np.ones((8, 1), np.float32), model="m",
+                              uid="r0"), arrival_time=0.0)
+        res = srv.run()
+        # post-abort admissions still serve v1 bits
+        np.testing.assert_array_equal(np.asarray(res["r0"].output),
+                                      np.asarray(before.output))
